@@ -1,0 +1,44 @@
+"""Paper §3.3 claim: split combining is lightweight enough for per-request
+real-time use on a content server.
+
+Measures: combine_plan latency, re-serialization latency, metadata sizes
+before/after, and the bytes saved vs shipping the Large variation — i.e. the
+server-side work to adapt one cached encoding to a client's parallelism.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import metadata, recoil
+from repro.core.rans import RansParams, StaticModel
+from repro.core.vectorized import encode_interleaved_fast
+
+from . import datasets
+
+
+def run(size: int = 0, quick: bool = False) -> list:
+    size = size or (2 * datasets.MB if quick else 10 * datasets.MB)
+    syms = datasets.rand_exponential(100, size)
+    params = RansParams(n_bits=11, ways=32)
+    model = StaticModel.from_symbols(syms, 256, params)
+    enc = encode_interleaved_fast(syms, model)
+    plan = recoil.plan_splits(enc, 2176)
+    blob_large = metadata.serialize_plan(plan)
+    rows = []
+    for m in (1024, 256, 64, 16, 4):
+        t0 = time.perf_counter()
+        small = recoil.combine_plan(plan, m)
+        t_combine = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        blob = metadata.serialize_plan(small)
+        t_ser = time.perf_counter() - t0
+        rows.append({
+            "bench": "combine", "target_threads": m,
+            "combine_us": round(t_combine * 1e6, 1),
+            "reserialize_ms": round(t_ser * 1e3, 2),
+            "metadata_bytes": len(blob),
+            "bytes_saved_vs_large": len(blob_large) - len(blob)})
+    return rows

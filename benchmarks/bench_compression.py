@@ -1,0 +1,88 @@
+"""Paper Tables 4-6: compressed sizes of variations (a)-(e) per dataset.
+
+  (a) Single-Thread baseline    one 32-way interleaved stream
+  (b) Conventional Large        2176 partitions (high-end-GPU grade)
+  (c) Recoil Large              2176 splits of ONE stream
+  (d) Conventional Small        16 partitions (CPU grade, re-encoded)
+  (e) Recoil Small              (c) combined down to 16 — NO re-encode
+  (f) multians                  out of scope (GPU tANS self-sync; DESIGN §2)
+
+Emits CSV rows: dataset,n_bits,variation,total_bytes,overhead_bytes,delta_pct.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import container, conventional, recoil
+from repro.core.rans import RansParams, StaticModel
+from repro.core.vectorized import encode_interleaved_fast
+
+from . import datasets
+
+LARGE, SMALL = 2176, 16
+
+
+def run_dataset(name: str, syms: np.ndarray, n_bits: int, rows: list):
+    params = RansParams(n_bits=n_bits, ways=32)
+    alpha = int(syms.max()) + 1
+    model = StaticModel.from_symbols(syms, alpha, params)
+    enc = encode_interleaved_fast(syms, model)
+    base = container.size_breakdown(enc=enc, model=model)
+
+    plan_large = recoil.plan_splits(enc, LARGE)
+    rec_large = container.size_breakdown(enc=enc, model=model, plan=plan_large)
+    plan_small = recoil.combine_plan(plan_large, SMALL)
+    rec_small = container.size_breakdown(enc=enc, model=model, plan=plan_small)
+
+    conv_large = container.size_breakdown(
+        conv=conventional.encode_conventional(syms, model, LARGE), model=model)
+    conv_small = container.size_breakdown(
+        conv=conventional.encode_conventional(syms, model, SMALL), model=model)
+
+    for tag, sb in [("a_single", base), ("b_conv_large", conv_large),
+                    ("c_recoil_large", rec_large), ("d_conv_small", conv_small),
+                    ("e_recoil_small", rec_small)]:
+        delta = 100.0 * (sb.total - base.total) / base.total
+        rows.append({
+            "bench": "compression", "dataset": name, "n_bits": n_bits,
+            "variation": tag, "total_bytes": sb.total,
+            "overhead_bytes": sb.overhead, "delta_pct": round(delta, 4)})
+    return rows
+
+
+def run(size=None, quick: bool = False) -> list:
+    rows = []
+    names = list(datasets.BYTE_DATASETS)
+    if quick:
+        names = ["rand_50", "rand_500", "pytext"]
+    size = size or (2 * datasets.MB if quick else 10 * datasets.MB)
+    for name in names:
+        syms = datasets.BYTE_DATASETS[name](size)
+        for n_bits in (11, 16):
+            run_dataset(name, syms, n_bits, rows)
+    # image-like adaptive datasets: n = 16 only (16-bit symbols, paper §5.2).
+    # Hyperprior codecs transmit the distributions via the hyper side channel,
+    # so the "file" here is stream + finals + split metadata only.
+    if not quick:
+        from repro.core import adaptive, metadata
+        for name, make in datasets.IMAGE_DATASETS.items():
+            syms, ctx, scales = make(2 * datasets.MB)
+            params = RansParams(n_bits=16, ways=32)
+            am = adaptive.ContextModel.from_scale_table(
+                scales, ctx, 2048, params, family="laplacian", mean=1024.0)
+            from repro.core.vectorized import encode_adaptive_fast
+            enc = encode_adaptive_fast(syms, am)
+            plan = recoil.plan_splits(enc, LARGE)
+            small = recoil.combine_plan(plan, SMALL)
+            total = enc.stream_bytes() + 32 * 4
+            for tag, extra in [
+                    ("a_single", 0),
+                    ("c_recoil_large", len(metadata.serialize_plan(plan))),
+                    ("e_recoil_small", len(metadata.serialize_plan(small)))]:
+                rows.append({
+                    "bench": "compression", "dataset": name, "n_bits": 16,
+                    "variation": tag, "total_bytes": total + extra,
+                    "overhead_bytes": 32 * 4 + extra,
+                    "delta_pct": round(100.0 * extra / total, 4)})
+    return rows

@@ -1,0 +1,57 @@
+"""Aggregates the dry-run cell JSONs into the §Roofline table.
+
+Run `python -m repro.launch.dryrun --all` first (separate process — it needs
+512 fake devices); this bench only reads experiments/dryrun/*.json.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(out_dir: str = "experiments/dryrun", quick: bool = False) -> list:
+    rows = []
+    for mesh in ("single", "multi"):
+        for path in sorted(glob.glob(os.path.join(out_dir, mesh, "*.json"))):
+            d = json.load(open(path))
+            if d.get("status", "").startswith("SKIP"):
+                rows.append({"bench": "roofline", "mesh": mesh,
+                             "arch": d["arch"], "shape": d["shape"],
+                             "status": "SKIP"})
+                continue
+            rows.append({
+                "bench": "roofline", "mesh": mesh, "arch": d["arch"],
+                "shape": d["shape"], "status": d.get("status", "?"),
+                "dominant": d.get("dominant"),
+                "t_comp_s": d.get("t_comp_s"), "t_mem_s": d.get("t_mem_s"),
+                "t_coll_s": d.get("t_coll_s"),
+                "useful_ratio": round(d.get("useful_ratio", 0), 3),
+                "roofline_fraction": round(d.get("roofline_fraction", 0), 4),
+                "mem_per_dev_gb": round(d.get("mem_per_dev_gb", 0), 2)})
+    if not rows:
+        rows.append({"bench": "roofline",
+                     "status": "NO DRY-RUN DATA (run repro.launch.dryrun)"})
+    return rows
+
+
+def markdown_table(out_dir: str = "experiments/dryrun") -> str:
+    rows = run(out_dir)
+    hdr = ("| mesh | arch | shape | dom | T_comp(s) | T_mem(s) | T_coll(s) "
+           "| useful | roofline | GB/dev |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("status") == "SKIP":
+            lines.append(f"| {r['mesh']} | {r['arch']} | {r['shape']} | SKIP "
+                         f"| | | | | | |")
+            continue
+        if "arch" not in r:
+            continue
+        lines.append(
+            f"| {r['mesh']} | {r['arch']} | {r['shape']} | {r['dominant']} "
+            f"| {r['t_comp_s']:.2e} | {r['t_mem_s']:.2e} "
+            f"| {r['t_coll_s']:.2e} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {r['mem_per_dev_gb']:.1f} |")
+    return "\n".join(lines)

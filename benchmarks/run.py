@@ -1,0 +1,66 @@
+"""Benchmark driver — one suite per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Emits CSV to stdout and benchmarks/results/*.csv.  Suites:
+
+    compression       Tables 4-6   variations (a)-(e) per dataset x n
+    partition_sweep   Figure 3     size vs #partitions, Conventional vs Recoil
+    throughput        Figure 7     CPU decode MB/s at matched parallelism
+    combine           §3.3         server-side metadata thinning latency
+    roofline          §Roofline    aggregates dry-run JSONs (if present)
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+import time
+
+from . import (bench_combine, bench_compression, bench_partition_sweep,
+               bench_roofline, bench_throughput)
+
+SUITES = {
+    "compression": bench_compression.run,
+    "partition_sweep": bench_partition_sweep.run,
+    "throughput": bench_throughput.run,
+    "combine": bench_combine.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small datasets / fewer variants (CI mode)")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    os.makedirs("benchmarks/results", exist_ok=True)
+    names = [args.only] if args.only else list(SUITES)
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = SUITES[name](quick=args.quick)
+        except TypeError:
+            rows = SUITES[name]()
+        dt = time.time() - t0
+        print(f"\n## {name} ({dt:.1f}s)", flush=True)
+        if not rows:
+            continue
+        keys = sorted({k for r in rows for k in r})
+        writer = csv.DictWriter(sys.stdout, fieldnames=keys)
+        writer.writeheader()
+        for r in rows:
+            writer.writerow(r)
+        with open(f"benchmarks/results/{name}.csv", "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            for r in rows:
+                w.writerow(r)
+    print("\nbenchmarks complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

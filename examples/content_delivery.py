@@ -1,0 +1,87 @@
+"""The paper's content-delivery scenario end-to-end (§3.3, §5).
+
+A server encodes content ONCE at max parallelism (2176 splits, GPU-grade).
+Clients attach their parallel capacity to the request; the server thins the
+split metadata in real time (no re-encode, no second stored variant) and
+ships bitstream + right-sized metadata.  Every client decodes with its own
+thread count and verifies the content.
+
+    PYTHONPATH=src python examples/content_delivery.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import container, recoil
+from repro.core.rans import RansParams, StaticModel
+from repro.core.vectorized import decode_recoil_fast, encode_interleaved_fast
+
+
+class ContentServer:
+    """Encode once; serve any client parallelism by deleting metadata."""
+
+    def __init__(self, payload: np.ndarray, max_splits: int = 2176):
+        self.params = RansParams(n_bits=11, ways=32)
+        self.model = StaticModel.from_symbols(payload, 256, self.params)
+        t0 = time.perf_counter()
+        self.enc = encode_interleaved_fast(payload, self.model)
+        self.plan = recoil.plan_splits(self.enc, max_splits)
+        self.encode_s = time.perf_counter() - t0
+
+    def serve(self, client_threads: int) -> bytes:
+        t0 = time.perf_counter()
+        plan = recoil.combine_plan(self.plan, client_threads)
+        buf = container.pack_recoil(self.enc, self.model, plan)
+        self.last_serve_ms = (time.perf_counter() - t0) * 1e3
+        return buf
+
+
+class Client:
+    def __init__(self, name: str, threads: int):
+        self.name, self.threads = name, threads
+
+    def fetch_and_decode(self, server: ContentServer) -> np.ndarray:
+        buf = server.serve(self.threads)
+        self.received_bytes = len(buf)
+        pc = container.parse(buf, server.params)
+        t0 = time.perf_counter()
+        out = decode_recoil_fast(pc.plan, pc.stream, pc.final_states, pc.model)
+        self.decode_s = time.perf_counter() - t0
+        return out
+
+
+def main():
+    rng = np.random.default_rng(7)
+    payload = np.minimum(rng.exponential(35, size=4_000_000).astype(np.int64),
+                         255)
+    server = ContentServer(payload)
+    print(f"server: encoded {len(payload)/1e6:.0f} MB once in "
+          f"{server.encode_s:.2f}s at {server.plan.n_threads} splits\n")
+    clients = [Client("phone (2 cores)", 2),
+               Client("laptop (16 cores)", 16),
+               Client("workstation (256)", 256),
+               Client("gpu-box (2176)", 2176)]
+    full = None
+    for c in clients:
+        out = c.fetch_and_decode(server)
+        assert (out == payload).all(), f"{c.name}: decode mismatch!"
+        if full is None:
+            full = c.received_bytes  # smallest client fetch
+        print(f"{c.name:20s} fetched {c.received_bytes:>9,} B "
+              f"(server thinning {server.last_serve_ms:6.1f} ms)  "
+              f"decoded+verified in {c.decode_s:5.2f}s with "
+              f"{c.threads} threads")
+    big = clients[-1].received_bytes
+    small = clients[0].received_bytes
+    print(f"\nbandwidth saved for the phone vs shipping the GPU variation: "
+          f"{big - small:,} B ({100 * (big - small) / big:.2f}%) — "
+          f"the paper's decoder-adaptive scalability claim")
+
+
+if __name__ == "__main__":
+    main()

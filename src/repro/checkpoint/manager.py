@@ -1,0 +1,218 @@
+"""Fault-tolerant checkpointing with Recoil-coded payload option.
+
+Layout (one directory per step, atomically renamed into place):
+
+    <root>/step_<N>/
+        manifest.json     tree structure, shapes, dtypes, crc32 per leaf,
+                          codec, step — NO device/mesh info (elastic restore
+                          re-shards onto whatever mesh the next incarnation
+                          has; see restore(..., shardings=...))
+        <leaf>.npy        codec="raw"
+        <leaf>.rcl        codec="recoil": int8 block-quantized + rANS-coded
+                          (paper container, split metadata at max
+                          parallelism; every restoring host thins it to its
+                          own thread count — DESIGN.md §3.1)
+        <leaf>.scale.npy  per-block fp32 scales for recoil leaves
+
+Durability: write to ``step_<N>.tmp``, fsync files, atomic ``os.replace``.
+A crash mid-write never corrupts the latest complete checkpoint; ``latest()``
+only ever sees renamed directories.  ``save_async`` runs the serialization
+on a worker thread off the training loop; ``wait()`` joins before the next
+save (single outstanding snapshot).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import zlib
+
+import jax
+import numpy as np
+
+from repro.core import container, recoil
+from repro.core.rans import RansParams, StaticModel
+from repro.core.vectorized import decode_recoil_fast, encode_interleaved_fast
+from repro.optim.compress import BLOCK, dequantize_int8, quantize_int8
+
+
+def _flatten(tree, prefix=""):
+    if not isinstance(tree, dict):
+        raise TypeError("checkpoint trees must be (nested) dicts of arrays")
+    out = {}
+    for k, v in tree.items():
+        name = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, name + "/"))
+        elif v is None:
+            continue
+        else:
+            out[name] = v
+    return out
+
+
+def _unflatten_into(flat: dict):
+    tree: dict = {}
+    for name, v in flat.items():
+        parts = name.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    root: str
+    keep: int = 3
+    codec: str = "raw"             # raw | recoil
+    recoil_splits: int = 256       # encode-once max parallelism
+    rans_params: RansParams = dataclasses.field(
+        default_factory=lambda: RansParams(n_bits=11, ways=32))
+
+    def __post_init__(self):
+        os.makedirs(self.root, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def latest(self) -> int | None:
+        steps = [int(d.split("_")[1]) for d in os.listdir(self.root)
+                 if d.startswith("step_") and not d.endswith(".tmp")]
+        return max(steps) if steps else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def _encode_leaf(self, arr: np.ndarray):
+        """int8-quantize + Recoil-encode one float leaf."""
+        q, scale = quantize_int8(arr)  # jnp ok on numpy too
+        q = np.asarray(q)
+        sym = (q.astype(np.int16).ravel() + 127).astype(np.int64)  # [0,254]
+        model = StaticModel.from_symbols(sym, 255, self.rans_params)
+        enc = encode_interleaved_fast(sym, model)
+        plan = recoil.plan_splits(enc, self.recoil_splits)
+        return container.pack_recoil(enc, model, plan), np.asarray(scale)
+
+    def _decode_leaf(self, buf: bytes, scale: np.ndarray, shape, dtype,
+                     n_threads: int = 0):
+        pc = container.parse(buf, self.rans_params)
+        plan = pc.plan
+        if n_threads and n_threads < plan.n_threads:
+            plan = recoil.combine_plan(plan, n_threads)
+        sym = decode_recoil_fast(plan, pc.stream, pc.final_states, pc.model)
+        q = (sym - 127).astype(np.int8).reshape(-1, BLOCK)
+        size = int(np.prod(shape))
+        arr = np.asarray(dequantize_int8(q, scale, tuple(shape), size))
+        return arr.astype(dtype)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree) -> str:
+        flat = _flatten(tree)
+        tmp = self._step_dir(step) + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "codec": self.codec, "leaves": {}}
+        for name, leaf in flat.items():
+            arr = np.asarray(leaf)
+            fname = name.replace("/", "__")
+            use_recoil = (self.codec == "recoil"
+                          and arr.dtype in (np.float32, np.dtype("bfloat16"))
+                          and arr.size >= 4096)
+            entry = {"shape": list(arr.shape), "dtype": str(arr.dtype),
+                     "codec": "recoil" if use_recoil else "raw"}
+            if use_recoil:
+                buf, scale = self._encode_leaf(arr.astype(np.float32))
+                with open(os.path.join(tmp, fname + ".rcl"), "wb") as f:
+                    f.write(buf)
+                np.save(os.path.join(tmp, fname + ".scale.npy"), scale)
+                entry["crc32"] = zlib.crc32(buf)
+                entry["bytes"] = len(buf)
+            else:
+                raw = arr.astype(np.float32) if arr.dtype == np.dtype(
+                    "bfloat16") else arr
+                if arr.dtype == np.dtype("bfloat16"):
+                    entry["stored_as"] = "float32"
+                path = os.path.join(tmp, fname + ".npy")
+                np.save(path, raw)
+                with open(path, "rb") as f:
+                    entry["crc32"] = zlib.crc32(f.read())
+            manifest["leaves"][name] = entry
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        final = self._step_dir(step)
+        if os.path.exists(final):
+            import shutil
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+        return final
+
+    def save_async(self, step: int, tree):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot off-device
+        self._thread = threading.Thread(
+            target=self.save, args=(step, host_tree), daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.root)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        import shutil
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, step: int | None = None, n_threads: int = 0,
+                shardings=None, verify: bool = True):
+        """Elastic restore: arrays are loaded logically then device_put onto
+        ``shardings`` (a pytree of NamedShardings matching the *new* mesh, or
+        None for host arrays).  ``n_threads`` is this host's decode
+        parallelism — the Recoil metadata is thinned before decoding."""
+        step = self.latest() if step is None else step
+        if step is None:
+            raise FileNotFoundError("no checkpoint found")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat = {}
+        for name, entry in manifest["leaves"].items():
+            fname = name.replace("/", "__")
+            if entry["codec"] == "recoil":
+                with open(os.path.join(d, fname + ".rcl"), "rb") as f:
+                    buf = f.read()
+                if verify and zlib.crc32(buf) != entry["crc32"]:
+                    raise IOError(f"crc mismatch on {name}")
+                scale = np.load(os.path.join(d, fname + ".scale.npy"))
+                arr = self._decode_leaf(buf, scale, entry["shape"],
+                                        np.float32, n_threads)
+                if entry["dtype"] == "bfloat16":
+                    import ml_dtypes
+                    arr = arr.astype(ml_dtypes.bfloat16)
+            else:
+                path = os.path.join(d, fname + ".npy")
+                if verify:
+                    with open(path, "rb") as f:
+                        if zlib.crc32(f.read()) != entry["crc32"]:
+                            raise IOError(f"crc mismatch on {name}")
+                arr = np.load(path)
+                if entry.get("stored_as") == "float32" \
+                        and entry["dtype"] == "bfloat16":
+                    import ml_dtypes
+                    arr = arr.astype(ml_dtypes.bfloat16)
+            flat[name] = arr
+        tree = _unflatten_into(flat)
+        if shardings is not None:
+            flat_sh = _flatten(shardings)
+            tree = _unflatten_into({
+                k: jax.device_put(v, flat_sh.get(k)) for k, v in flat.items()})
+        return tree, step

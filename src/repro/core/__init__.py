@@ -1,0 +1,26 @@
+"""Recoil core — the paper's contribution as a composable library.
+
+Public API (see DESIGN.md §1 for the mapping to paper sections):
+
+  rans         — parameters, quantized models, scalar oracles (Defs 2.1/2.2)
+  interleaved  — W-way oracle codecs + emission log (§2.2, Fig. 1)
+  vectorized   — JAX group-stepped fast paths (encode + batched walk decode)
+  heuristic    — Def 4.1 split-point selection
+  recoil       — split planning / combining / decoding (§3, §4.1-4.2)
+  metadata     — §4.3 bit-packed serialization (Tables 1-2)
+  conventional — partitioning-symbols baseline (§2.3)
+  adaptive     — index-keyed distributions (§3.1 advantage 3, div2k tests)
+  container    — on-wire formats for variations (a)-(e)
+"""
+
+from .rans import DEFAULT_PARAMS, RansParams, StaticModel  # noqa: F401
+from .interleaved import (EncodedStream, SplitState,  # noqa: F401
+                          decode_interleaved, encode_interleaved)
+from .recoil import (RecoilPlan, SplitPoint, build_split_states,  # noqa: F401
+                     combine_plan, decode_recoil, plan_splits)
+from .metadata import deserialize_plan, serialize_plan  # noqa: F401
+from .conventional import (ConventionalEncoded, decode_conventional,  # noqa: F401
+                           encode_conventional)
+from .vectorized import (WalkBatch, decode_conventional_fast,  # noqa: F401
+                         decode_recoil_fast, encode_interleaved_fast,
+                         walk_decode_batch)

@@ -1,0 +1,325 @@
+"""Vectorized JAX rANS codec — group-stepped scan with W parallel lanes.
+
+This is the TPU-shaped formulation of interleaved rANS (paper §2.2) and of
+the Recoil walk (§4.1): one ``lax.scan`` step processes a *symbol group* of W
+lanes; the only cross-lane interaction is the renormalization read/write
+*offset assignment*, which the paper's CUDA code gets from a warp ballot and
+we get from a reversed exclusive cumsum over the lane read/write mask — the
+VPU-native equivalent (see DESIGN.md §2).
+
+Everything here is pure jnp (jit-able, vmap-able over splits) and doubles as
+the oracle for the Pallas kernel (`repro.kernels.rans_decode.ref` re-exports
+the walk).  Encode is also provided — the paper's encoder is serial per way,
+but all W ways advance independently so a scan over groups recovers W-lane
+parallelism (the *stream interleaving* is reconstructed on the host from the
+per-group emit masks, preserving exact oracle byte order).
+
+Walk-state conventions match :class:`repro.core.interleaved.SplitState`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .interleaved import EncodedStream, SplitState
+from .rans import RansParams, StaticModel
+
+
+# ---------------------------------------------------------------------------
+# Encode (scan over groups, W lanes; host-side stream compaction)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "ways"))
+def _encode_scan(sym_gw: jax.Array, active_gw: jax.Array, f_tab: jax.Array,
+                 F_tab: jax.Array, n_bits: int, ways: int, ctx_gw=None):
+    shift = np.uint32(32 - n_bits)
+    b_bits = np.uint32(16)
+    word_mask = np.uint32(0xFFFF)
+    x0 = jnp.full((ways,), np.uint32(1 << 16), dtype=jnp.uint32)
+
+    def step(x, inp):
+        if ctx_gw is None:
+            s, active = inp
+            fs = f_tab[s].astype(jnp.uint32)
+            Fs = F_tab[s].astype(jnp.uint32)
+        else:
+            s, active, c = inp
+            fs = f_tab[c, s].astype(jnp.uint32)
+            Fs = F_tab[c, s].astype(jnp.uint32)
+        renorm = active & ((x >> shift) >= fs)
+        word = (x & word_mask).astype(jnp.uint16)
+        x1 = jnp.where(renorm, x >> b_bits, x)
+        y = x1  # bounded post-renorm state where renorm fired (Lemma 3.1)
+        q = x1 // jnp.maximum(fs, np.uint32(1))
+        r = x1 - q * jnp.maximum(fs, np.uint32(1))
+        enc = (q << np.uint32(n_bits)) + Fs + r
+        x2 = jnp.where(active, enc, x1)
+        return x2, (word, renorm, y)
+
+    xs = (sym_gw, active_gw) if ctx_gw is None else (sym_gw, active_gw, ctx_gw)
+    final, (words, masks, ys) = jax.lax.scan(step, x0, xs)
+    return final, words, masks, ys
+
+
+def encode_interleaved_fast(symbols: np.ndarray, model: StaticModel,
+                            ctx=None, ctx_f=None, ctx_F=None) -> EncodedStream:
+    """Bit-exact drop-in for :func:`repro.core.interleaved.encode_interleaved`.
+
+    With (ctx, ctx_f, ctx_F) provided, encodes with per-index distributions
+    (adaptive coding) — drop-in for ``adaptive.encode_interleaved_adaptive``.
+    """
+    p = model.params if model is not None else None
+    if p is None:
+        raise ValueError("model required (pass a StaticModel; adaptive uses "
+                         "encode_adaptive_fast)")
+    W = p.ways
+    syms = np.asarray(symbols, dtype=np.int32).ravel()
+    N = len(syms)
+    G = -(-N // W) if N else 0
+    pad = G * W - N
+    sym_gw = np.concatenate([syms, np.zeros(pad, np.int32)]).reshape(G, W)
+    active = np.concatenate([np.ones(N, bool), np.zeros(pad, bool)]).reshape(G, W)
+    if ctx is None:
+        f_tab = jnp.asarray(model.f.astype(np.int32))
+        F_tab = jnp.asarray(model.F.astype(np.int32))
+        ctx_gw = None
+    else:
+        f_tab, F_tab = jnp.asarray(ctx_f), jnp.asarray(ctx_F)
+        ctx_gw = jnp.asarray(np.concatenate(
+            [np.asarray(ctx, np.int32), np.zeros(pad, np.int32)]).reshape(G, W))
+    final, words, masks, ys = _encode_scan(
+        jnp.asarray(sym_gw), jnp.asarray(active), f_tab, F_tab,
+        p.n_bits, W, ctx_gw=ctx_gw)
+    words = np.asarray(words).reshape(-1)
+    masks = np.asarray(masks).reshape(-1)
+    ys = np.asarray(ys).reshape(-1)
+    sel = np.flatnonzero(masks)  # row-major == emission order (way-ascending)
+    return EncodedStream(
+        stream=words[sel].astype(np.uint16),
+        final_states=np.asarray(final, dtype=np.uint32),
+        n_symbols=N, params=p,
+        k_of_word=sel.astype(np.int64),
+        y_of_word=ys[sel].astype(np.uint32))
+
+
+def encode_adaptive_fast(symbols: np.ndarray, ctx_model) -> EncodedStream:
+    """JAX-scan adaptive encoder (bit-exact vs the python oracle)."""
+    return encode_interleaved_fast(
+        symbols,
+        StaticModel(f=ctx_model.f[0], F=ctx_model.F[0],
+                    params=ctx_model.params),
+        ctx=ctx_model.ctx,
+        ctx_f=ctx_model.f.astype(np.int32),
+        ctx_F=ctx_model.F.astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Walk decode (scan over groups, vmapped over splits)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WalkBatch:
+    """SoA form of a list of SplitStates, padded to a common step count.
+
+    ``g_hi[m]`` is split m's top group, the scan iterates g = g_hi - t for
+    t in [0, n_steps); rows with g < g_lo are inactive padding.
+    """
+
+    k: np.ndarray        # int32[S, W]
+    y: np.ndarray        # uint32[S, W]
+    x0: np.ndarray       # uint32[S, W]
+    q0: np.ndarray       # int32[S]
+    g_hi: np.ndarray     # int32[S]
+    start: np.ndarray    # int32[S]
+    stop: np.ndarray     # int32[S]
+    keep_lo: np.ndarray  # int32[S]
+    keep_hi: np.ndarray  # int32[S]
+    out_base: np.ndarray  # int64[S] — global output offset (conventional adapter)
+    n_steps: int
+    ways: int
+
+    @classmethod
+    def from_splits(cls, splits: list[SplitState], ways: int,
+                    out_bases: np.ndarray | None = None) -> "WalkBatch":
+        S = len(splits)
+        k = np.stack([s.k for s in splits]).astype(np.int32)
+        y = np.stack([s.y for s in splits]).astype(np.uint32)
+        x0 = np.stack([s.x0 for s in splits]).astype(np.uint32)
+        q0 = np.asarray([s.q0 for s in splits], np.int32)
+        start = np.asarray([s.start for s in splits], np.int32)
+        stop = np.asarray([s.stop for s in splits], np.int32)
+        g_hi = start // ways
+        g_lo = stop // ways
+        n_steps = int((g_hi - g_lo + 1).max()) if S else 0
+        return cls(
+            k=k, y=y, x0=x0, q0=q0, g_hi=g_hi.astype(np.int32),
+            start=start, stop=stop,
+            keep_lo=np.asarray([s.keep_lo for s in splits], np.int32),
+            keep_hi=np.asarray([s.keep_hi for s in splits], np.int32),
+            out_base=(np.zeros(S, np.int32) if out_bases is None
+                      else np.asarray(out_bases, np.int32)),
+            n_steps=n_steps, ways=ways)
+
+
+def _walk_one_split(stream: jax.Array, sym_lut: jax.Array, f_lut: jax.Array,
+                    F_lut: jax.Array, k: jax.Array, y: jax.Array, x0: jax.Array,
+                    q0: jax.Array, g_hi: jax.Array, start: jax.Array,
+                    stop: jax.Array, keep_lo: jax.Array, keep_hi: jax.Array,
+                    *, n_bits: int, ways: int, n_steps: int,
+                    ctx_of_index: jax.Array | None = None):
+    """One split's walk; returns (syms i32[T, W], keep bool[T, W])."""
+    W = ways
+    lanes = jnp.arange(W, dtype=jnp.int32)
+    slot_mask = np.uint32((1 << n_bits) - 1)
+    L = np.uint32(1 << 16)
+    b_bits = np.uint32(16)
+    k32 = k.astype(jnp.int32)
+
+    def step(carry, t):
+        x, q = carry
+        g = g_hi - t
+        i = g * W + lanes                      # walk symbol indices, this group
+        active = (i <= start) & (i >= stop) & (g >= 0)
+        recon = active & (i == k32)
+        dec = active & (i < k32)
+        slot = (x & slot_mask).astype(jnp.int32)
+        if ctx_of_index is None and f_lut is None:
+            # packed LUT (paper §4.4): one gather, bitwise unpack —
+            # sym[0:8] | f[8:20] | F[20:32]; requires n <= 12, 8-bit symbols
+            packed = sym_lut[slot].astype(jnp.uint32)
+            s = (packed & jnp.uint32(0xFF)).astype(jnp.int32)
+            fs = (packed >> jnp.uint32(8)) & jnp.uint32(0xFFF)
+            Fs = (packed >> jnp.uint32(20)) & jnp.uint32(0xFFF)
+        elif ctx_of_index is None:
+            s = sym_lut[slot]
+            fs = f_lut[slot].astype(jnp.uint32)
+            Fs = F_lut[slot].astype(jnp.uint32)
+        else:
+            c = ctx_of_index[jnp.clip(i, 0, ctx_of_index.shape[0] - 1)]
+            s = sym_lut[c, slot]
+            fs = f_lut[c, slot].astype(jnp.uint32)
+            Fs = F_lut[c, slot].astype(jnp.uint32)
+        x_dec = fs * (x >> np.uint32(n_bits)) + (slot.astype(jnp.uint32) - Fs)
+        under = x_dec < L
+        reads = recon | (dec & under)
+        # Lane j's read offset counts reads in lanes > j (decode order is
+        # descending i in the group): suffix_excl = total - prefix_incl,
+        # avoiding two lane reversals per step (EXPERIMENTS §Perf H3).
+        rd = reads.astype(jnp.int32)
+        total = jnp.sum(rd)
+        suffix_excl = total - jnp.cumsum(rd)
+        idx = q - suffix_excl
+        word = stream[jnp.clip(idx, 0, stream.shape[0] - 1)].astype(jnp.uint32)
+        x_recon = (y << b_bits) | word
+        x_dec2 = jnp.where(under, (x_dec << b_bits) | word, x_dec)
+        x_new = jnp.where(recon, x_recon, jnp.where(dec, x_dec2, x))
+        q_new = q - jnp.sum(rd)
+        keep = dec & (i >= keep_lo) & (i < keep_hi)
+        return (x_new, q_new), (s, keep)
+
+    (xf, qf), (syms, keeps) = jax.lax.scan(
+        step, (x0, q0), jnp.arange(n_steps, dtype=jnp.int32))
+    return syms, keeps, qf
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "ways", "n_steps", "n_symbols"))
+def _walk_batch_jit(stream, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi, start,
+                    stop, keep_lo, keep_hi, out_base, *, n_bits, ways, n_steps,
+                    n_symbols, ctx_of_index=None):
+    walk = functools.partial(_walk_one_split, stream, sym_lut, f_lut, F_lut,
+                             n_bits=n_bits, ways=ways, n_steps=n_steps,
+                             ctx_of_index=ctx_of_index)
+    syms, keeps, qf = jax.vmap(walk)(k, y, x0, q0, g_hi, start, stop,
+                                     keep_lo, keep_hi)
+    # Scatter kept symbols into the global output (unique positions by
+    # construction; dropped positions land on the padding slot).
+    S = k.shape[0]
+    lanes = jnp.arange(ways, dtype=jnp.int32)
+    t = jnp.arange(n_steps, dtype=jnp.int32)
+    g = g_hi[:, None, None] - t[None, :, None]
+    i = (g * ways + lanes[None, None, :]) + out_base[:, None, None]
+    i = jnp.where(keeps, i, n_symbols)
+    out = jnp.full((n_symbols + 1,), -1, dtype=jnp.int32)
+    out = out.at[i.reshape(-1)].set(syms.reshape(-1).astype(jnp.int32),
+                                    mode="drop", unique_indices=False)
+    return out[:n_symbols], qf
+
+
+def walk_decode_batch(batch: WalkBatch, stream: np.ndarray, model: StaticModel,
+                      n_symbols: int, ctx_model=None,
+                      packed_lut: bool = False) -> np.ndarray:
+    """Decode all splits in parallel (vmap) — the fast CPU/TPU jnp path.
+
+    ``ctx_model`` switches to adaptive (index-keyed) distributions; pass a
+    :class:`repro.core.adaptive.ContextModel` (then ``model`` is ignored).
+    ``packed_lut`` uses the paper §4.4 single-int32 slot table (n <= 12,
+    8-bit symbols): one gather per step instead of three.
+    """
+    if packed_lut and ctx_model is None:
+        from .rans import pack_decode_lut
+        packed = pack_decode_lut(model.f, model.F)
+        out, _ = _walk_batch_jit(
+            jnp.asarray(np.ascontiguousarray(stream).astype(np.uint32)),
+            jnp.asarray(packed), None, None,
+            jnp.asarray(batch.k), jnp.asarray(batch.y), jnp.asarray(batch.x0),
+            jnp.asarray(batch.q0), jnp.asarray(batch.g_hi),
+            jnp.asarray(batch.start), jnp.asarray(batch.stop),
+            jnp.asarray(batch.keep_lo), jnp.asarray(batch.keep_hi),
+            jnp.asarray(batch.out_base),
+            n_bits=model.params.n_bits, ways=batch.ways,
+            n_steps=batch.n_steps, n_symbols=n_symbols, ctx_of_index=None)
+        res = np.asarray(out, dtype=np.int64)
+        assert (res >= 0).all()
+        return res
+    if ctx_model is not None:
+        sym_lut = jnp.asarray(ctx_model.slot_luts())
+        f_lut = jnp.asarray(ctx_model.f.astype(np.int32))
+        F2 = ctx_model.F[:, :-1].astype(np.int32)
+        n_bits = ctx_model.params.n_bits
+        # gather per (ctx, slot): pre-expand F to slot-indexed tables
+        C, A = ctx_model.f.shape
+        slot_f = np.take_along_axis(ctx_model.f.astype(np.int32),
+                                    ctx_model.slot_luts(), axis=1)
+        slot_F = np.take_along_axis(F2, ctx_model.slot_luts(), axis=1)
+        args = (sym_lut, jnp.asarray(slot_f), jnp.asarray(slot_F))
+        ctx = jnp.asarray(ctx_model.ctx.astype(np.int32))
+    else:
+        lut = model.slot_lut()
+        slot_f = model.f.astype(np.int32)[lut]
+        slot_F = model.F[:-1].astype(np.int32)[lut]
+        args = (jnp.asarray(lut), jnp.asarray(slot_f), jnp.asarray(slot_F))
+        n_bits = model.params.n_bits
+        ctx = None
+    out, _ = _walk_batch_jit(
+        jnp.asarray(np.ascontiguousarray(stream).view(np.uint16).astype(np.uint32)),
+        *args,
+        jnp.asarray(batch.k), jnp.asarray(batch.y), jnp.asarray(batch.x0),
+        jnp.asarray(batch.q0), jnp.asarray(batch.g_hi), jnp.asarray(batch.start),
+        jnp.asarray(batch.stop), jnp.asarray(batch.keep_lo),
+        jnp.asarray(batch.keep_hi), jnp.asarray(batch.out_base),
+        n_bits=n_bits, ways=batch.ways, n_steps=batch.n_steps,
+        n_symbols=n_symbols, ctx_of_index=ctx)
+    res = np.asarray(out, dtype=np.int64)
+    assert (res >= 0).all(), "vectorized walk left uncovered symbols"
+    return res
+
+
+def decode_recoil_fast(plan, stream, final_states, model: StaticModel,
+                       ctx_model=None) -> np.ndarray:
+    from .recoil import build_split_states
+    splits = build_split_states(plan, final_states)
+    batch = WalkBatch.from_splits(splits, plan.ways)
+    return walk_decode_batch(batch, stream, model, plan.n_symbols, ctx_model)
+
+
+def decode_conventional_fast(conv, model: StaticModel) -> np.ndarray:
+    from .conventional import to_split_states
+    splits, words, out_bases = to_split_states(conv)
+    W = conv.partitions[0].params.ways
+    batch = WalkBatch.from_splits(splits, W, out_bases)
+    return walk_decode_batch(batch, words, model, conv.n_symbols)

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: parallel rANS
+walk decoding (rans_decode/).  See DESIGN.md §2 for the CUDA->TPU
+adaptation and EXPERIMENTS.md §4.3 for the kernel's structural roofline."""

@@ -1,0 +1,9 @@
+"""Pallas TPU kernel for Recoil parallel rANS decoding.
+
+  rans_decode.py — pl.pallas_call kernel + BlockSpec VMEM tiling
+  ops.py         — jit'd wrapper (lane packing, stream slabs, scatter)
+  ref.py         — pure-jnp oracle with the kernel's output contract
+"""
+
+from .ops import decode, decode_recoil_kernel  # noqa: F401
+from .ref import decode_reference, walk_reference  # noqa: F401

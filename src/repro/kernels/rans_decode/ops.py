@@ -1,0 +1,171 @@
+"""jit'd public wrapper for the Pallas rANS walk-decode kernel.
+
+Handles the host-side data plumbing around the kernel:
+
+  * lane packing     — PACK = 128 // W splits per (sublane) row, padding with
+                       inert splits (``start = -1`` never activates);
+  * slab building    — per-grid-block contiguous stream windows sized to the
+                       block's worst-case word consumption (kernel VMEM bound;
+                       see rans_decode.py header), with slab-relative ``q0``;
+  * scatter          — kernel emits (rows, T, 128) symbols (-1 = not kept);
+                       positions are reconstructed closed-form from
+                       ``g_hi - t`` and scattered into the flat output.
+
+``decode(...)`` is the user entry point; ``impl='jnp'`` routes to the pure
+jnp batched walk (same math, no Pallas) for CPU-fast paths and A/B tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.rans import StaticModel
+from repro.core.vectorized import WalkBatch, walk_decode_batch
+from .rans_decode import LANES, walk_decode_pallas
+
+
+def pack_batch(batch: WalkBatch):
+    """Lane-pack a WalkBatch: (S, W) split arrays -> (rows, 128) tiles."""
+    W = batch.ways
+    if LANES % W != 0:
+        raise ValueError(f"ways={W} must divide {LANES} for the Pallas path")
+    pack = LANES // W
+    S = batch.k.shape[0]
+    rows = -(-S // pack)
+    S_pad = rows * pack
+
+    def pad_splits(a, fill):
+        out = np.full((S_pad,) + a.shape[1:], fill, a.dtype)
+        out[:S] = a
+        return out
+
+    # Inert padding: start=-1 & stop=0 makes `active` always false.
+    k = pad_splits(batch.k, np.int32(2 ** 30))
+    y = pad_splits(batch.y, np.uint32(0))
+    x0 = pad_splits(batch.x0, np.uint32(0))
+    q0 = pad_splits(batch.q0, np.int32(0))
+    g_hi = pad_splits(batch.g_hi, np.int32(0))
+    start = pad_splits(batch.start, np.int32(-1))
+    stop = pad_splits(batch.stop, np.int32(0))
+    keep_lo = pad_splits(batch.keep_lo, np.int32(0))
+    keep_hi = pad_splits(batch.keep_hi, np.int32(0))
+    out_base = pad_splits(batch.out_base.astype(np.int32), np.int32(0))
+
+    def lanes(a):   # (S_pad, W) -> (rows, 128)
+        return np.ascontiguousarray(a.reshape(rows, pack * W))
+
+    def scalars(a):  # (S_pad,) -> (rows, 128), broadcast per segment
+        return np.ascontiguousarray(
+            np.repeat(a.reshape(rows, pack), W, axis=1))
+
+    packed = dict(
+        k=lanes(k.astype(np.int32)), y=lanes(y.view(np.int32)),
+        x0=lanes(x0.view(np.int32)), q0=scalars(q0), g_hi=scalars(g_hi),
+        start=scalars(start), stop=scalars(stop), keep_lo=scalars(keep_lo),
+        keep_hi=scalars(keep_hi))
+    per_split = dict(q0=q0, g_hi=g_hi, out_base=out_base, span=start - stop + 1)
+    return packed, per_split, rows, pack, S_pad
+
+
+def build_slabs(stream: np.ndarray, per_split: dict, rows: int, pack: int,
+                rows_per_block: int):
+    """Per-block stream slabs.  A split consumes at most one word per walked
+    symbol index, so its reads live in ``[q0 - span, q0]``; the block slab is
+    the union over its splits, padded to the max block width (multiple of 8
+    words for sublane alignment)."""
+    n_blocks = rows // rows_per_block
+    per_block = rows_per_block * pack
+    q0 = per_split["q0"].reshape(n_blocks, per_block)
+    span = per_split["span"].reshape(n_blocks, per_block)
+    lo = np.maximum(0, (q0 - span).min(axis=1))
+    hi = q0.max(axis=1)
+    width = int((hi - lo + 1).max())
+    width = -(-width // 8) * 8
+    slabs = np.zeros((n_blocks, width), dtype=np.int32)
+    stream32 = np.ascontiguousarray(stream).astype(np.uint32).astype(np.int32)
+    for b in range(n_blocks):
+        seg = stream32[lo[b]:hi[b] + 1]
+        slabs[b, :len(seg)] = seg
+    return slabs, lo
+
+
+def _luts(model: StaticModel):
+    lut = model.slot_lut()
+    slot_f = model.f.astype(np.int32)[lut]
+    slot_F = model.F[:-1].astype(np.int32)[lut]
+    return (jnp.asarray(lut.astype(np.int32)), jnp.asarray(slot_f),
+            jnp.asarray(slot_F))
+
+
+def decode(batch: WalkBatch, stream: np.ndarray, model: StaticModel,
+           n_symbols: int, *, impl: str = "pallas", interpret: bool = True,
+           rows_per_block: int = 8) -> np.ndarray:
+    """Decode a planned WalkBatch into the flat symbol array."""
+    if impl == "jnp":
+        return walk_decode_batch(batch, stream, model, n_symbols)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    packed, per_split, rows, pack, S_pad = pack_batch(batch)
+    if rows % rows_per_block != 0:
+        pad_rows = -(-rows // rows_per_block) * rows_per_block - rows
+        for name, arr in packed.items():
+            fill = -1 if name == "start" else 0
+            if name == "k":
+                fill = 2 ** 30
+            packed[name] = np.concatenate(
+                [arr, np.full((pad_rows, LANES), fill, arr.dtype)], axis=0)
+        for name in ("q0", "g_hi", "out_base", "span"):
+            a = per_split[name]
+            per_split[name] = np.concatenate(
+                [a, np.zeros(pad_rows * pack, a.dtype)])
+        rows += pad_rows
+        S_pad = rows * pack
+    slabs, slab_lo = build_slabs(stream, per_split, rows, pack, rows_per_block)
+    # q0 relative to the block slab
+    n_blocks = rows // rows_per_block
+    lo_rows = np.repeat(slab_lo, rows_per_block).astype(np.int32)
+    q0_rel = packed["q0"] - lo_rows[:, None]
+    sym_lut, f_lut, F_lut = _luts(model)
+    out, qf = walk_decode_pallas(
+        jnp.asarray(slabs), sym_lut, f_lut, F_lut,
+        jnp.asarray(packed["k"]), jnp.asarray(packed["y"]),
+        jnp.asarray(packed["x0"]), jnp.asarray(q0_rel),
+        jnp.asarray(packed["g_hi"]), jnp.asarray(packed["start"]),
+        jnp.asarray(packed["stop"]), jnp.asarray(packed["keep_lo"]),
+        jnp.asarray(packed["keep_hi"]),
+        n_bits=model.params.n_bits, ways=batch.ways, n_steps=batch.n_steps,
+        rows_per_block=rows_per_block, interpret=interpret)
+    return scatter_outputs(np.asarray(out), per_split, batch.ways, pack,
+                           n_symbols)
+
+
+def scatter_outputs(out_tiles: np.ndarray, per_split: dict, ways: int,
+                    pack: int, n_symbols: int) -> np.ndarray:
+    """(rows, T, 128) kernel tiles -> flat decoded symbols."""
+    rows, T, L = out_tiles.shape
+    S_pad = rows * pack
+    # (rows, T, pack, W) -> (S_pad, T, W)
+    tiles = out_tiles.reshape(rows, T, pack, ways).transpose(0, 2, 1, 3)
+    tiles = tiles.reshape(S_pad, T, ways)
+    g_hi = per_split["g_hi"].astype(np.int64)
+    base = per_split["out_base"].astype(np.int64)
+    t = np.arange(T, dtype=np.int64)
+    lane = np.arange(ways, dtype=np.int64)
+    i = ((g_hi[:, None, None] - t[None, :, None]) * ways + lane[None, None, :]
+         + base[:, None, None])
+    keep = tiles >= 0
+    outv = np.full(n_symbols, -1, dtype=np.int64)
+    outv[i[keep]] = tiles[keep]
+    assert (outv >= 0).all(), "kernel outputs did not cover all symbols"
+    return outv
+
+
+def decode_recoil_kernel(plan, stream, final_states, model: StaticModel,
+                         **kw) -> np.ndarray:
+    """Convenience: RecoilPlan -> kernel decode."""
+    from repro.core.recoil import build_split_states
+    splits = build_split_states(plan, final_states)
+    batch = WalkBatch.from_splits(splits, plan.ways)
+    return decode(batch, stream, model, plan.n_symbols, **kw)

@@ -1,0 +1,175 @@
+"""Pallas TPU kernel for the Recoil parallel rANS walk decode (paper §4.1).
+
+Hardware adaptation (DESIGN.md §2).  The paper's CUDA kernel maps one split
+to one 32-thread warp; the AVX512 variant packs 16 u32 lanes per register.
+On TPU the natural unit is the (8, 128) VPU vector tile, so we:
+
+  * pack ``PACK = 128 // W`` splits side by side along the lane axis (for the
+    paper-faithful W = 32 that is 4 splits/row; a W = 128 "TPU-native" codec
+    fills the row with one split) — the per-lane decode math is identical,
+    only the renorm read-offset assignment is per *segment* of W lanes;
+  * put ``ROWS`` packed rows in the sublane axis, so one grid step decodes
+    ``ROWS * PACK`` splits on a (ROWS, 128) tile;
+  * replace the warp ballot + prefix used by CUDA for read offsets with a
+    segmented reversed cumsum over the lane axis (VPU-friendly);
+  * keep the slot->(symbol, f, F) tables (<= 3 * 2^n * 4 B = 768 KiB at
+    n = 16) and the stream slab resident in VMEM.
+
+Stream residency: each grid block receives a per-block *slab* of the stream
+(host re-layout, ``ops.build_slabs``) sized to the worst-case consumption of
+its splits, so VMEM never needs the full bitstream — this mirrors the HBM ->
+VMEM DMA streaming a production kernel would issue and bounds the VMEM
+working set to
+
+    ROWS*128*4 B (states) + slab_words*4 B + LUTs + out tile.
+
+Walk-step recurrences are exactly :func:`repro.core.vectorized._walk_one_split`
+(the jnp oracle these kernels are tested against, see ref.py):
+
+    reconstruct (i == k_j):  x_j = (y_j << 16) | word
+    decode      (i <  k_j):  slot = x & mask; s = lut[slot]
+                             x = f_s * (x >> n) + slot - F_s
+                             if x < L: x = (x << 16) | word
+
+Integer notes: states are uint32 (top bit is live — comparisons and shifts
+must be unsigned); the decode transform never overflows (DESIGN.md §2 /
+rans.py header derivation); no integer division anywhere in decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LANES = 128  # TPU VPU lane width
+
+
+def _segment_read_offsets(reads: jax.Array, ways: int):
+    """Per-lane read slots within each W-lane segment, descending-lane-first.
+
+    Returns (suffix_excl, seg_total): lane l's word index is
+    ``q - suffix_excl[l]`` and its segment consumed ``seg_total`` words.
+    Implemented as a full-row reversed cumsum + segment-boundary correction
+    (static-index gathers only), the VPU analogue of a warp ballot+prefix.
+    """
+    rows, L = reads.shape
+    rd = reads.astype(jnp.int32)
+    # exclusive prefix (no lane reversals — see EXPERIMENTS §Perf H3):
+    # P[j] = reads in lanes < j;  suffix_excl = seg_total - in-seg prefix - rd
+    prefix = jnp.cumsum(rd, axis=1)
+    padded = jnp.concatenate([jnp.zeros((rows, 1), jnp.int32), prefix], axis=1)
+    lanes = jax.lax.iota(jnp.int32, L)
+    seg_start = (lanes // ways) * ways
+    seg_next = jnp.minimum(seg_start + ways, L)
+    p_excl = padded[:, :-1]                       # P[j], exclusive of lane j
+    p_start = jnp.take(padded, seg_start, axis=1)
+    p_next = jnp.take(padded, seg_next, axis=1)
+    seg_total = p_next - p_start
+    suffix_excl = seg_total - (p_excl - p_start) - rd
+    return suffix_excl, seg_total
+
+
+def _walk_kernel(stream_ref, sym_ref, f_ref, F_ref, k_ref, y_ref, x0_ref,
+                 q0_ref, ghi_ref, start_ref, stop_ref, klo_ref, khi_ref,
+                 out_ref, qf_ref, *, n_bits: int, ways: int, n_steps: int):
+    """One grid step: walk ``n_steps`` symbol groups for a (ROWS, 128) tile."""
+    L_bound = jnp.uint32(1 << 16)
+    b_bits = jnp.uint32(16)
+    slot_mask = jnp.uint32((1 << n_bits) - 1)
+    rows, L = k_ref.shape
+    lane_in_seg = (jax.lax.iota(jnp.int32, L) % ways)[None, :]
+
+    k = k_ref[...]
+    y = y_ref[...].astype(jnp.uint32)
+    start = start_ref[...]
+    stop = stop_ref[...]
+    keep_lo = klo_ref[...]
+    keep_hi = khi_ref[...]
+    g_hi = ghi_ref[...]
+    stream = stream_ref[0]  # block spec delivers (1, slab_words)
+
+    def step(t, carry):
+        x, q = carry
+        g = g_hi - t
+        i = g * ways + lane_in_seg
+        active = (i <= start) & (i >= stop)
+        recon = active & (i == k)
+        dec = active & (i < k)
+        slot = (x & slot_mask).astype(jnp.int32)
+        s = jnp.take(sym_ref[...], slot)
+        fs = jnp.take(f_ref[...], slot).astype(jnp.uint32)
+        Fs = jnp.take(F_ref[...], slot).astype(jnp.uint32)
+        x_dec = fs * (x >> jnp.uint32(n_bits)) + (slot.astype(jnp.uint32) - Fs)
+        under = x_dec < L_bound
+        reads = recon | (dec & under)
+        suffix_excl, seg_total = _segment_read_offsets(reads, ways)
+        idx = jnp.clip(q - suffix_excl, 0, stream.shape[0] - 1)
+        word = jnp.take(stream, idx).astype(jnp.uint32)
+        x_recon = (y << b_bits) | word
+        x_dec2 = jnp.where(under, (x_dec << b_bits) | word, x_dec)
+        x_new = jnp.where(recon, x_recon, jnp.where(dec, x_dec2, x))
+        q_new = q - seg_total
+        keep = dec & (i >= keep_lo) & (i < keep_hi)
+        pl.store(out_ref, (slice(None), pl.dslice(t, 1), slice(None)),
+                 jnp.where(keep, s, -1)[:, None, :])
+        return (x_new, q_new)
+
+    x0 = x0_ref[...].astype(jnp.uint32)
+    q0 = q0_ref[...]
+    xf, qf = jax.lax.fori_loop(0, n_steps, step, (x0, q0))
+    qf_ref[...] = qf
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "ways", "n_steps", "rows_per_block", "interpret"))
+def walk_decode_pallas(slabs: jax.Array, sym_lut: jax.Array, f_lut: jax.Array,
+                       F_lut: jax.Array, k: jax.Array, y: jax.Array,
+                       x0: jax.Array, q0: jax.Array, g_hi: jax.Array,
+                       start: jax.Array, stop: jax.Array, keep_lo: jax.Array,
+                       keep_hi: jax.Array, *, n_bits: int, ways: int,
+                       n_steps: int, rows_per_block: int = 8,
+                       interpret: bool = True):
+    """pallas_call wrapper.  All per-split arrays are lane-packed to
+    (n_rows, 128) by :mod:`.ops`; ``slabs`` is (n_blocks, slab_words) — the
+    per-block stream slab with ``q0`` already slab-relative.
+
+    Returns (out, qf): out is int32 (n_rows, n_steps, 128), -1 where not kept.
+    """
+    n_rows, L = k.shape
+    assert L == LANES and n_rows % rows_per_block == 0
+    n_blocks = n_rows // rows_per_block
+    assert slabs.shape[0] == n_blocks
+    slab_words = slabs.shape[1]
+    R = rows_per_block
+
+    grid = (n_blocks,)
+    row_spec = pl.BlockSpec((R, L), lambda b: (b, 0))
+    full = lambda arr: pl.BlockSpec(arr.shape, lambda b: (0,) * arr.ndim)
+    kernel = functools.partial(_walk_kernel, n_bits=n_bits, ways=ways,
+                               n_steps=n_steps)
+    out, qf = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, slab_words), lambda b: (b, 0)),  # stream slab
+            full(sym_lut), full(f_lut), full(F_lut),
+            row_spec, row_spec, row_spec, row_spec, row_spec, row_spec,
+            row_spec, row_spec, row_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((R, n_steps, L), lambda b: (b, 0, 0)),
+            row_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_rows, n_steps, L), jnp.int32),
+            jax.ShapeDtypeStruct((n_rows, L), jnp.int32),
+        ],
+        interpret=interpret,
+    )(slabs, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi,
+      start, stop, keep_lo, keep_hi)
+    return out, qf

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the Pallas rANS walk-decode kernel.
+
+Mirrors the kernel's exact output contract — (S, T, W) int32 symbol tiles
+with -1 where a position is not kept, plus the final per-split stream
+pointers — using :func:`repro.core.vectorized._walk_one_split`, which is
+itself validated against the scalar python oracle in
+:mod:`repro.core.interleaved`.  Kernel tests assert elementwise equality
+(integer algorithm — exact, not approximate) between this and the kernel
+across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.rans import StaticModel
+from repro.core.vectorized import WalkBatch, _walk_one_split
+
+
+def walk_reference(batch: WalkBatch, stream: np.ndarray, model: StaticModel):
+    """Returns (tiles int32[S, T, W] with -1 = not kept, qf int32[S, W])."""
+    lut = model.slot_lut()
+    slot_f = model.f.astype(np.int32)[lut]
+    slot_F = model.F[:-1].astype(np.int32)[lut]
+    walk = functools.partial(
+        _walk_one_split,
+        jnp.asarray(np.ascontiguousarray(stream).astype(np.uint32)),
+        jnp.asarray(lut.astype(np.int32)), jnp.asarray(slot_f),
+        jnp.asarray(slot_F), n_bits=model.params.n_bits, ways=batch.ways,
+        n_steps=batch.n_steps)
+    syms, keeps, qf = jax.vmap(walk)(
+        jnp.asarray(batch.k), jnp.asarray(batch.y), jnp.asarray(batch.x0),
+        jnp.asarray(batch.q0), jnp.asarray(batch.g_hi),
+        jnp.asarray(batch.start), jnp.asarray(batch.stop),
+        jnp.asarray(batch.keep_lo), jnp.asarray(batch.keep_hi))
+    tiles = np.where(np.asarray(keeps), np.asarray(syms), -1).astype(np.int32)
+    return tiles, np.asarray(qf)
+
+
+def decode_reference(batch: WalkBatch, stream: np.ndarray, model: StaticModel,
+                     n_symbols: int) -> np.ndarray:
+    """Full reference decode via the oracle tiles (host scatter)."""
+    tiles, _ = walk_reference(batch, stream, model)
+    S, T, W = tiles.shape
+    g_hi = batch.g_hi.astype(np.int64)
+    base = batch.out_base.astype(np.int64)
+    t = np.arange(T, dtype=np.int64)
+    lane = np.arange(W, dtype=np.int64)
+    i = ((g_hi[:, None, None] - t[None, :, None]) * W + lane[None, None, :]
+         + base[:, None, None])
+    keep = tiles >= 0
+    out = np.full(n_symbols, -1, dtype=np.int64)
+    out[i[keep]] = tiles[keep]
+    assert (out >= 0).all()
+    return out

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization, and smoke tests/benches must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256-chip pod (v5e-256); 2x16x16 = 512 chips across 2 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_devices: int | None = None, model: int = 2):
+    """Tiny mesh over whatever devices exist (subprocess multi-device tests)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Mesh axes that carry the batch (DP) dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

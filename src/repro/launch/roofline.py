@@ -1,0 +1,152 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), per the spec:
+
+    T_comp = HLO_FLOPs      / (chips * 197e12  FLOP/s bf16)   [v5e]
+    T_mem  = HLO_bytes      / (chips * 819e9   B/s HBM)
+    T_coll = coll_bytes     / (chips * 50e9    B/s per ICI link)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes (XLA reports the
+*per-device* program cost after SPMD partitioning on this backend; we
+normalize either way via ``flops_are_per_device``), and the compiled HLO
+text for collective bytes (cost_analysis does not include them): we sum the
+result-shape bytes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute op in the per-device program — i.e. bytes
+each device receives per step; ring-algorithm send-side constants (~2x for
+all-reduce) are noted, not folded in, so comparisons across variants are
+like-for-like.
+
+``MODEL_FLOPS`` = 6*N*D for training (fwd+bwd), 2*N*D forward-only, with
+N = active params — the ratio MODEL_FLOPS/HLO_FLOPs exposes remat recompute
+and MoE dispatch waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link
+
+_COLLECTIVE_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string, incl. tuples: 'f32[16,128]' etc."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind in a (per-device) HLO module.
+
+    HLO line form: ``%name = TYPE kind(...)``; the result TYPE (possibly a
+    tuple) sits between '=' and the op name.  ``-done``/get-tuple-element
+    lines don't match (no ``kind(``).
+    """
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        eq = line.index("=")
+        if eq > m.start():   # op name appears before '=' (operand ref etc.)
+            continue
+        kind = m.group(1).lower()
+        out[kind] += shape_bytes(line[eq + 1:m.start()])
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # per-device
+    hlo_bytes: float          # per-device
+    coll_bytes: float         # per-device
+    model_flops: float        # whole-step useful FLOPs (all chips)
+    t_comp: float
+    t_mem: float
+    t_coll: float
+    coll_detail: dict
+    memory_per_device: float  # bytes (args + temps + outputs)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_comp, "memory": self.t_mem,
+                 "collective": self.t_coll}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_bound(self) -> float:
+        return max(self.t_comp, self.t_mem, self.t_coll)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * chips)."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful FLOPs / (chips * peak * bound_time)."""
+        t = self.step_time_bound
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hlo_bytes_per_dev": self.hlo_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "t_comp_s": self.t_comp, "t_mem_s": self.t_mem,
+            "t_coll_s": self.t_coll, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "mem_per_dev_gb": self.memory_per_device / 1e9,
+            "coll_detail": self.coll_detail,
+        }
+
+
+def build(arch: str, shape: str, mesh_name: str, chips: int,
+          cost: dict, hlo_text: str, model_flops: float,
+          memory_per_device: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    coll_total = float(sum(v for k, v in coll.items() if k != "count"))
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, coll_bytes=coll_total,
+        model_flops=model_flops,
+        t_comp=flops / PEAK_FLOPS,
+        t_mem=byts / HBM_BW,
+        t_coll=coll_total / ICI_BW,
+        coll_detail=coll, memory_per_device=memory_per_device)

@@ -1,0 +1,175 @@
+"""Attention: GQA with RoPE, qk-norm, QKV bias, sliding windows.
+
+Two execution paths:
+
+  * :func:`flash_attention` — blocked online-softmax over KV chunks
+    (lax.scan), the TPU-native formulation: the (Sq, Sk) score matrix never
+    materializes, so prefill_32k compiles with bounded temps and the same
+    code serves train_4k.  Supports causal, sliding-window and cross
+    (non-causal) masking, all as position predicates on the running block.
+  * :func:`decode_attention` — single-token query against a cache laid out
+    (B, S, KV, D); optionally ring-buffered for sliding windows.  Masking is
+    by absolute position so ring wraparound is handled by the position
+    buffer, not data movement.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .scan_util import scan as _scan
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k, n_heads: int):
+    """(B, S, KV, D) -> (B, S, H, D) by group broadcast (GQA)."""
+    B, S, KV, D = k.shape
+    if KV == n_heads:
+        return k
+    rep = n_heads // KV
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, rep, D)).reshape(
+        B, S, n_heads, D)
+
+
+def banded_flash_attention(q, k, v, *, window: int, block: int = 1024):
+    """Sliding-window attention that only touches the diagonal band.
+
+    The generic flash path scans EVERY kv block for every query row and
+    masks, so SWA compute/bytes scale with seq_len instead of window.  Here
+    q is cut into blocks of ``block >= window``; block i attends to kv
+    blocks {i-1, i} only — all other pairs are fully masked by the window
+    predicate, so skipping them is exact.  Compute and HBM traffic scale
+    with window, not sequence (hillclimb H2 of EXPERIMENTS.md §Perf).
+
+    Requires self-attention with iota positions (train/prefill path).
+    """
+    B, Sq, H, D = q.shape
+    assert k.shape[1] == Sq
+    block = max(block, window)
+    nb = -(-Sq // block)
+    pad = nb * block - Sq
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        qp = q
+    S2 = nb * block
+    qb = qp.reshape(B, nb, block, H, D).astype(jnp.float32)
+    kb = k.reshape(B, nb, block, H, D)
+    vb = v.reshape(B, nb, block, H, D)
+    # kv band for block i = [block i-1 ; block i] (zeros for i == 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    kband = jnp.concatenate([kprev, kb], axis=2).astype(jnp.float32)
+    vband = jnp.concatenate([vprev, vb], axis=2).astype(jnp.float32)
+    s = jnp.einsum("bnqhd,bnkhd->bnhqk", qb, kband) / np.sqrt(D)
+    qpos = (jnp.arange(S2).reshape(nb, block))[:, :, None]
+    kpos = jnp.concatenate(
+        [jnp.arange(S2).reshape(nb, block) - block,
+         jnp.arange(S2).reshape(nb, block)], axis=1)[:, None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - window) & (kpos >= 0)
+    s = jnp.where(mask[None, :, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", p, vband)
+    out = out.reshape(B, S2, H, D)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_positions=None, kv_positions=None, block: int = 1024,
+                    banded_window: bool = False):
+    """Online-softmax blocked attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D).  Positions default to iota; for
+    decode-style continuation pass absolute positions.  window > 0 masks
+    kv_pos <= q_pos - window (sliding window).  causal=False + no window is
+    cross/bidirectional attention.  banded_window=True routes SWA to the
+    band-skipping kernel (exact; see banded_flash_attention).
+    """
+    if (banded_window and window and causal and q_positions is None
+            and kv_positions is None and q.shape[1] == k.shape[1]):
+        return banded_flash_attention(q, k, v, window=window, block=block)
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    if q_positions is None:
+        q_positions = jnp.arange(Sq, dtype=jnp.int32)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Sk, dtype=jnp.int32)
+    scale = 1.0 / np.sqrt(D)
+    nblocks = -(-Sk // block)
+    pad = nblocks * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-(10 ** 9))
+    kb = k.reshape(B, nblocks, block, H, D).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nblocks, block, H, D).transpose(1, 0, 3, 2, 4)
+    pb = kv_positions.reshape(nblocks, block)
+    qt = q.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B, H, Sq, D)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, pblk = blk          # (B,H,blk,D), (B,H,blk,D), (blk,)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qt, kblk.astype(jnp.float32)) * scale
+        mask = pblk[None, :] <= q_positions[:, None] if causal else \
+            jnp.ones((Sq, block), bool)
+        if window:
+            mask = mask & (pblk[None, :] > q_positions[:, None] - window)
+        mask = mask & (pblk >= 0)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (m, l, acc), _ = _scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Sq, H, D)
+
+
+def decode_attention(q, k_cache, v_cache, kv_positions, q_position,
+                     k_scale=None, v_scale=None):
+    """One-step attention. q: (B, 1, H, D); caches: (B, S, KV, D) in bf16 or
+    int8 (+ per-slot scales (B, S, KV, 1)); kv_positions: (B, S) absolute
+    positions (-1 = empty slot).
+
+    GQA is expressed as a grouped einsum — the KV cache is NEVER expanded to
+    H heads nor cast to f32 wholesale (that would materialize a cache-sized
+    temp per layer); dots accumulate in f32 via preferred_element_type and
+    int8 scales fold into the (B, KV, G, S) score/probability tensors, which
+    are kv_seq-sharded like the cache."""
+    B, _, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    work_dt = jnp.bfloat16 if k_cache.dtype == jnp.int8 else k_cache.dtype
+    qg = q.reshape(B, KV, G, D).astype(work_dt)
+    k = k_cache.astype(work_dt) if k_cache.dtype == jnp.int8 else k_cache
+    v = v_cache.astype(work_dt) if v_cache.dtype == jnp.int8 else v_cache
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                   preferred_element_type=jnp.float32) / np.sqrt(D)
+    if k_scale is not None:   # int8: scale factors out of the d-contraction
+        s = s * k_scale[..., 0].transpose(0, 2, 1)[:, :, None, :]
+    mask = (kv_positions >= 0) & (kv_positions <= q_position[:, None])
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:   # fold v scales into the probabilities
+        p = p * v_scale[..., 0].transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(work_dt), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

@@ -1,0 +1,98 @@
+"""Shared model primitives (pure-functional JAX).
+
+Parameters are plain nested dicts; every leaf is created through
+:class:`ParamBuilder`, which records the leaf's *logical axes* in a parallel
+specs tree — the launcher resolves those to NamedShardings via
+:mod:`repro.parallel.sharding` (same rules the forward pass uses through
+``shard(...)`` activation constraints).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamBuilder:
+    """Creates param leaves + mirrors logical axes into a specs tree."""
+
+    def __init__(self, rng: jax.Array, dtype=jnp.bfloat16):
+        self.rng = rng
+        self.dtype = dtype
+        self.specs: dict = {}
+
+    def _split(self):
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    def normal(self, tree: dict, specs: dict, name: str, shape, axes,
+               scale: float = None):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = (1.0 / np.sqrt(fan_in)) if scale is None else scale
+        tree[name] = (jax.random.normal(self._split(), shape, jnp.float32)
+                      * scale).astype(self.dtype)
+        specs[name] = axes
+        return tree[name]
+
+    def zeros(self, tree: dict, specs: dict, name: str, shape, axes):
+        tree[name] = jnp.zeros(shape, self.dtype)
+        specs[name] = axes
+        return tree[name]
+
+    def ones(self, tree: dict, specs: dict, name: str, shape, axes):
+        tree[name] = jnp.ones(shape, self.dtype)
+        specs[name] = axes
+        return tree[name]
+
+    def const(self, tree: dict, specs: dict, name: str, value, axes):
+        tree[name] = jnp.asarray(value, self.dtype)
+        specs[name] = axes
+        return tree[name]
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def head_rms_norm(x, scale, eps: float = 1e-6):
+    """Per-head qk-norm (Qwen3/Chameleon): normalize over head_dim."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """Rotate-half RoPE. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-np.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]   # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_in, w_out, shard_fn=None):
+    """SwiGLU MLP: silu(x @ w_gate) * (x @ w_in) @ w_out."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_in)
+    if shard_fn is not None:
+        h = shard_fn(h)
+    return h @ w_out
+
+
+def cross_entropy(logits, labels, ignore: int = -100):
+    """Mean next-token CE over non-ignored labels; fp32 softmax."""
+    logits = logits.astype(jnp.float32)
+    valid = labels != ignore
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

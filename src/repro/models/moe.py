@@ -1,0 +1,136 @@
+"""Mixture-of-Experts: token-choice top-k routing with capacity.
+
+Dispatch is scatter/gather based (not dense one-hot einsum) so compiled HLO
+FLOPs stay ~= active-expert FLOPs * capacity_factor — the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio stays honest (a dense all-experts dispatch would
+inflate HLO FLOPs by E/top_k).
+
+Per expert e the slots are filled first-come-first-served (cumsum position);
+overflow tokens are dropped (their combine weight contribution is zero),
+which is the standard capacity-factor trade-off at scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+
+def moe_ffn(x, w_router, w_gate, w_in, w_out, *, top_k: int,
+            capacity_factor: float, dropless: bool = False,
+            groups: int = 0):
+    """x: (B, S, d); expert weights: (E, d, ff) / (E, ff, d).
+
+    Returns (B, S, d).  Capacity C = ceil(cf * T * top_k / E) with
+    T = B * S (static), so the dispatch buffers have static shapes.
+
+    ``dropless=True`` sets C = T (no token ever dropped) — used by the
+    single-token decode path where T = batch is small; full-sequence paths
+    keep capacity routing, whose batch-coupled drops are the standard
+    GShard/Switch approximation (noted in DESIGN.md §5).
+    """
+    B, S, d = x.shape
+    E = w_gate.shape[0]
+    if groups:
+        return _grouped_moe_ffn(x, w_router, w_gate, w_in, w_out,
+                                top_k=top_k, capacity_factor=capacity_factor,
+                                groups=groups)
+    T = B * S
+    C = T if dropless else max(1, int(capacity_factor * T * top_k / E))
+    xf = x.reshape(T, d)
+    logits = (xf @ w_router).astype(jnp.float32)            # (T, E)
+    top_vals, top_idx = jax.lax.top_k(logits, top_k)        # (T, k)
+    gates = jax.nn.softmax(top_vals, axis=-1).astype(x.dtype)
+
+    y = jnp.zeros((T, d), x.dtype)
+    token_ids = jnp.arange(T, dtype=jnp.int32)
+    for j in range(top_k):                                  # k <= 2, unrolled
+        e = top_idx[:, j]                                   # (T,)
+        onehot = (e[:, None] == jnp.arange(E)[None, :]).astype(jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) * onehot           # 1-indexed slot
+        slot = pos.sum(axis=1) - 1                          # (T,)
+        keep = slot < C
+        flat = jnp.where(keep, e * C + slot, E * C)         # E*C = drop bin
+        # token index per (expert, slot)
+        owner = jnp.full((E * C + 1,), T, jnp.int32).at[flat].set(
+            token_ids, mode="drop")[: E * C]
+        xg = jnp.where((owner < T)[:, None],
+                       xf[jnp.clip(owner, 0, T - 1)], 0).reshape(E, C, d)
+        # capacity dim sharded over the batch (DP) axes: dispatch buffers
+        # stay O(T/dp) per device even when E doesn't divide the model axis
+        xg = shard(xg, "experts", "batch", "embed")
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, w_gate)) * \
+            jnp.einsum("ecd,edf->ecf", xg, w_in)
+        h = shard(h, "experts", "batch", "expert_ff")
+        out = jnp.einsum("ecf,efd->ecd", h, w_out).reshape(E * C, d)
+        contrib = jnp.zeros((T + 1, d), x.dtype).at[owner].add(
+            out, mode="drop")[:T]
+        y = y + contrib * gates[:, j:j + 1]
+    return y.reshape(B, S, d)
+
+
+def _grouped_moe_ffn(x, w_router, w_gate, w_in, w_out, *, top_k: int,
+                     capacity_factor: float, groups: int):
+    """Hierarchical dispatch (EXPERIMENTS §Perf H1b): tokens are routed in
+    ``groups`` independent blocks whose leading dim is sharded over the DP
+    axes, so the dispatch gather/scatter is LOCAL per data shard — the
+    measured alternative global dispatch materializes (E*C, d) cross-shard
+    gathers that GSPMD lowers to multi-GB all-reduces (grok baseline).
+    Capacity is per group (C_g = cf*T_g*k/E), the same total budget."""
+    B, S, d = x.shape
+    E = w_gate.shape[0]
+    G = groups
+    T = B * S
+    assert T % G == 0, (T, G)
+    Tg = T // G
+    C = max(1, int(capacity_factor * Tg * top_k / E))
+    xf = shard(x.reshape(G, Tg, d), "batch", None, "embed")
+    logits = jnp.einsum("gtd,de->gte", xf, w_router).astype(jnp.float32)
+    top_vals, top_idx = jax.lax.top_k(logits, top_k)        # (G, Tg, k)
+    gates = jax.nn.softmax(top_vals, axis=-1).astype(x.dtype)
+    token_ids = jnp.arange(Tg, dtype=jnp.int32)
+    rows = jnp.arange(G, dtype=jnp.int32)[:, None]
+    y = jnp.zeros((G, Tg, d), x.dtype)
+    for j in range(top_k):
+        e = top_idx[..., j]                                  # (G, Tg)
+        onehot = (e[..., None] == jnp.arange(E)[None, None, :]).astype(jnp.int32)
+        pos = jnp.cumsum(onehot, axis=1) * onehot
+        slot = pos.sum(axis=2) - 1                           # (G, Tg)
+        keep = slot < C
+        flat = jnp.where(keep, e * C + slot, E * C)
+        owner = jnp.full((G, E * C + 1), Tg, jnp.int32).at[
+            rows, flat].set(jnp.broadcast_to(token_ids, (G, Tg)),
+                            mode="drop")[:, :E * C]
+        xg = jnp.take_along_axis(
+            xf, jnp.clip(owner, 0, Tg - 1)[..., None], axis=1)
+        xg = jnp.where((owner < Tg)[..., None], xg, 0).reshape(G, E, C, d)
+        xg = shard(xg, "batch", "experts", None, "embed")
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xg, w_gate)) * \
+            jnp.einsum("gecd,edf->gecf", xg, w_in)
+        h = shard(h, "batch", "experts", None, "expert_ff")
+        out = jnp.einsum("gecf,efd->gecd", h, w_out).reshape(G, E * C, d)
+        contrib = jnp.zeros((G, Tg + 1, d), x.dtype).at[
+            rows, jnp.where(owner < Tg, owner, Tg)].add(out)[:, :Tg]
+        y = y + contrib * gates[..., j][..., None]   # token-indexed combine
+    return y.reshape(B, S, d)
+
+
+def init_moe(pb, tree, specs, prefix, cfg):
+    """Stacked per-layer MoE weights: (L, E, d, ff).
+
+    moe_contraction_fsdp lays experts out (E, d/data, ff/model) so the
+    per-layer FSDP gather moves only the data-sharded contraction slices
+    (TP shard stays resident) — EXPERIMENTS §Perf hillclimb H1."""
+    L, E, d, ff = cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.d_ff
+    d_ax = "embed_fsdp" if cfg.moe_contraction_fsdp else "embed"
+    ff_ax = "expert_ff_tp" if cfg.moe_contraction_fsdp else "expert_ff"
+    pb.normal(tree, specs, f"{prefix}router", (L, d, E),
+              (None, "embed", "experts"))
+    pb.normal(tree, specs, f"{prefix}gate", (L, E, d, ff),
+              (None, "experts", d_ax, ff_ax))
+    pb.normal(tree, specs, f"{prefix}in", (L, E, d, ff),
+              (None, "experts", d_ax, ff_ax))
+    pb.normal(tree, specs, f"{prefix}out", (L, E, ff, d),
+              (None, "experts", ff_ax, d_ax))

@@ -1,0 +1,71 @@
+"""Scan with a global cost-mode switch.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE (verified by probe, see
+EXPERIMENTS.md §Dry-run "costing methodology"), so the dry-run costing pass
+re-lowers the step with every ``lax.scan`` fully unrolled at a reduced layer
+count and extrapolates.  All model scans route through :func:`scan` so the
+switch is one context manager.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+
+class _Flag(threading.local):
+    def __init__(self):
+        self.unroll = False
+        self.vma_axes: tuple = ()
+
+
+_FLAG = _Flag()
+
+
+@contextlib.contextmanager
+def cost_mode():
+    """Unroll every model scan (dry-run costing pass only)."""
+    prev = _FLAG.unroll
+    _FLAG.unroll = True
+    try:
+        yield
+    finally:
+        _FLAG.unroll = prev
+
+
+@contextlib.contextmanager
+def vma_axes(axes: tuple):
+    """Mark model-scan carries as varying over manual shard_map axes.
+
+    Used by the cross-pod compressed train step (partial-manual shard_map
+    with check_vma): scan carries initialized from invariant zeros must be
+    pcast to 'varying' because the scanned inputs derive from the pod-local
+    batch.  A no-op outside this context."""
+    prev = _FLAG.vma_axes
+    _FLAG.vma_axes = tuple(axes)
+    try:
+        yield
+    finally:
+        _FLAG.vma_axes = prev
+
+
+def pvary(tree):
+    """pcast a pytree to 'varying' over the active vma axes (no-op default;
+    leaves that are already varying are left untouched)."""
+    if not _FLAG.vma_axes:
+        return tree
+
+    def one(a):
+        try:
+            return jax.lax.pcast(a, _FLAG.vma_axes, to="varying")
+        except ValueError:   # already varying over (a superset of) the axes
+            return a
+
+    return jax.tree.map(one, tree)
+
+
+def scan(f, init, xs, length=None):
+    return jax.lax.scan(f, pvary(init), xs, length=length,
+                        unroll=True if _FLAG.unroll else 1)

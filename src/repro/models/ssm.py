@@ -1,0 +1,116 @@
+"""Mamba2 SSD (state-space duality, arXiv:2405.21060) — chunked dual form.
+
+The sequence is split into chunks of Q tokens.  Within a chunk the recurrence
+is unrolled into an attention-like lower-triangular matmul (MXU work); across
+chunks only the (H, P, N) state is carried — O(1) per chunk — so the whole
+layer is sub-quadratic in S and dominated by dense matmuls.  Decode uses the
+exact recurrent form on a persistent state.
+
+Shapes: x (B, S, H, P) heads of the expanded inner dim; B/C (B, S, N) one
+shared group; dt (B, S, H) softplus-positive step sizes; A (H,) negative.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .scan_util import scan as _scan
+
+CHUNK = 128
+
+
+def segsum(log_a):
+    """(..., Q) per-step log decay -> (..., Q, Q) lower-tri pairwise sums:
+    out[t, s] = sum_{r in (s, t]} log_a[r] for s < t (else -inf off-tri)."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # l_t - l_s
+    tri = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(tri, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bmat, Cmat, h0=None, chunk: int = CHUNK):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,) (negative); Bmat/Cmat: (B, S, N).
+    h0: optional initial state (B, H, P, N).  Returns (y (B,S,H,P),
+    h_final (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = Bmat.reshape(Bsz, nc, chunk, N).astype(f32)
+    Cc = Cmat.reshape(Bsz, nc, chunk, N).astype(f32)
+    log_a = dtc * A.astype(f32)[None, None, None, :]     # (B,nc,Q,H) <= 0
+    log_a = log_a.transpose(0, 1, 3, 2)                  # (B,nc,H,Q)
+    xdt = xc * dtc[..., None]                            # dt-scaled input
+
+    # ---- intra-chunk (dual/attention-like) ----
+    Lmat = jnp.exp(segsum(log_a))                        # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)       # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", scores, Lmat, xdt)
+
+    # ---- chunk summary states ----
+    csum = jnp.cumsum(log_a, axis=-1)                    # (B,nc,H,Q)
+    total = csum[..., -1:]                               # (B,nc,H,1)
+    decay_to_end = jnp.exp(total - csum)                 # exp(sum_{r>s} log_a)
+    states = jnp.einsum("bckn,bchk,bckhp->bchpn", Bc, decay_to_end, xdt)
+
+    # ---- inter-chunk state carry (sequential scan over chunks) ----
+    chunk_decay = jnp.exp(total[..., 0])                 # (B,nc,H)
+
+    def carry(h, inp):
+        st, dec = inp                                    # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    h_init = jnp.zeros((Bsz, H, P, N), f32) if h0 is None else h0.astype(f32)
+    h_last, h_prevs = _scan(
+        carry, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution ----
+    decay_from_start = jnp.exp(csum)                     # exp(sum_{r<=t} log_a)
+    y_inter = jnp.einsum("bcqn,bchq,bchpn->bcqhp",
+                         Cc, decay_from_start, h_prevs)
+
+    y = (y_intra + y_inter).reshape(Bsz, nc * chunk, H, P)[:, :S]
+    return y.astype(x.dtype), h_last
+
+
+def ssd_decode_step(x, dt, A, Bvec, Cvec, h):
+    """Recurrent single step.  x: (B,H,P); dt: (B,H); B/C: (B,N);
+    h: (B,H,P,N).  Returns (y (B,H,P), h')."""
+    f32 = jnp.float32
+    a = jnp.exp(dt.astype(f32) * A.astype(f32)[None, :])         # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", (x * dt[..., None]).astype(f32),
+                     Bvec.astype(f32))
+    h_new = h * a[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cvec.astype(f32))
+    return y.astype(x.dtype), h_new
+
+
+def causal_conv(x, w, cache=None):
+    """Depthwise causal conv1d.  x: (B, S, Cch); w: (K, Cch).
+    With cache (B, K-1, Cch): single-step update (S == 1)."""
+    K = w.shape[0]
+    if cache is not None:
+        window = jnp.concatenate([cache, x], axis=1)     # (B, K, C)
+        y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                       w.astype(jnp.float32))[:, None]
+        return y.astype(x.dtype), window[:, 1:]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]].astype(jnp.float32)
+            * w[i].astype(jnp.float32) for i in range(K))
+    return y.astype(x.dtype), xp[:, -(K - 1):] if K > 1 else None

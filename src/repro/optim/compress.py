@@ -1,0 +1,99 @@
+"""Distributed-optimization tricks: gradient compression.
+
+Two layers, matching DESIGN.md §3.2:
+
+1. **Cross-pod int8 all-gather with error feedback** (device side).
+   Under the multi-pod mesh the DP gradient reduction crosses the slow
+   inter-pod links.  ``crosspod_compressed_grads`` runs the model math under
+   GSPMD (``shard_map`` manual only over the "pod" axis, auto over
+   data/model): each pod's locally-reduced gradient block is int8
+   block-quantized (+ error feedback residual carried in the optimizer
+   state), all-gathered over "pod" as int8 — 4x fewer inter-pod bytes than
+   an fp32 ring all-reduce — then dequantized and averaged.  The quantizer
+   is unbiased within a block up to rounding; EF makes the scheme convergent
+   (Karimireddy et al.).
+
+2. **Recoil-coded residual streams** (host side, repro.checkpoint +
+   examples/checkpoint_distribution.py): int8 payloads are entropy-coded
+   with the paper's codec; heterogeneous subscribers thin the split metadata
+   to their own parallelism — the paper's content-delivery story applied to
+   parameter/gradient distribution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 256
+
+
+def quantize_int8(g: jax.Array, block: int = BLOCK):
+    """Per-block symmetric int8 quantization. Returns (q, scales)."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, size: int):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def compress_decompress(g: jax.Array, ef: jax.Array, axis_name: str | None):
+    """One gradient leaf: add EF, quantize, (all-gather over pods), average,
+    return (g_hat, new_ef).  With axis_name=None this is the single-pod
+    identity-communication path (still quantizes, for EF parity in tests).
+
+    EF residuals are per-pod state; under shard_map they carry a leading
+    pod-block axis of size 1 (sharded P("pod", ...)), detected by ndim."""
+    lead = ef.ndim == g.ndim + 1
+    if lead:
+        ef = ef[0]
+    size = int(np.prod(g.shape))
+    gq_in = g.astype(jnp.float32) + ef
+    q, scale = quantize_int8(gq_in)
+    local_hat = dequantize_int8(q, scale, g.shape, size)
+    new_ef = gq_in - local_hat
+    if lead:
+        new_ef = new_ef[None]
+    if axis_name is None:
+        return local_hat.astype(g.dtype), new_ef
+    # int8 payload crosses the pod links; dequantize+mean locally.
+    q_all = jax.lax.all_gather(q, axis_name)          # (pods, nb, B) int8
+    s_all = jax.lax.all_gather(scale, axis_name)      # (pods, nb, 1) f32
+    n_pods = q_all.shape[0]
+    acc = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0) / n_pods
+    g_hat = acc.reshape(-1)[:size].reshape(g.shape)
+    return g_hat.astype(g.dtype), new_ef
+
+
+def init_error_feedback(params, n_pods: int = 0):
+    """n_pods > 0 adds the leading per-pod axis (shard_map manual mode)."""
+    lead = (n_pods,) if n_pods else ()
+    return jax.tree.map(
+        lambda p: jnp.zeros(lead + p.shape, jnp.float32), params)
+
+
+def compress_tree(grads, ef_tree, axis_name: str | None):
+    """Apply cross-pod compression to every gradient leaf."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_tree)
+    out = [compress_decompress(g, e, axis_name)
+           for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def compressed_bytes_ratio(params) -> float:
+    """Napkin: payload bytes (int8 + fp32 scale per block) vs fp32."""
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    comp = n + (n // BLOCK + 1) * 4
+    return comp / (4 * n)

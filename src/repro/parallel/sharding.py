@@ -1,0 +1,170 @@
+"""Logical-axis sharding: one rules table, resolved per tensor per mesh.
+
+Every tensor in the framework is annotated with *logical* axis names
+("batch", "heads", "ff", ...).  A :class:`ShardingRules` maps each logical
+axis to a priority list of mesh-axis candidates; the resolver picks the first
+candidate whose mesh size divides the dimension, else falls back to
+replication (recording the fallback so DESIGN.md trade-offs are auditable —
+e.g. hymba's 25 heads on a 16-way model axis, or grok's 8 experts).
+
+Profiles:
+  * ``base``  — DP over (pod, data); TP over model for heads/ff/vocab;
+                ZeRO-1 moments over (data, model).
+  * ``fsdp``  — adds ("model", "data") candidates for big parameter axes so
+                100B+ archs (grok, llama4-scout) shard weights over the full
+                mesh (GSPMD inserts the per-layer all-gathers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Mesh-axis candidates per logical axis, in priority order.  `None` entries
+# mean "replicate".  Tuples mean sharding over multiple mesh axes jointly.
+BASE_RULES: dict[str, tuple] = {
+    "batch":    (("pod", "data"), ("data",), None),
+    "seq":      (None,),
+    # KV caches shard their sequence dim over the model axis (flash-decoding
+    # style: GSPMD inserts the partial-softmax all-reduce).  Without this no
+    # 32k-context decode cell fits 16 GB/chip.
+    "kv_seq":   (("model",), None),
+    "embed":    (None,),
+    "heads":    (("model",), None),
+    "kv_heads": (("model",), None),   # falls back to replicate for GQA<model
+    "head_dim": (None,),
+    "ff":       (("model",), None),
+    "experts":  (("model",), None),
+    "expert_ff": (("model",), None),
+    "vocab":    (("model",), None),
+    "ssm_inner": (("model",), None),
+    "ssm_heads": (("model",), None),
+    "ssm_state": (None,),
+    "conv":     (None,),
+    "moments":  (("pod", "data", "model"), ("data", "model"), ("data",), None),
+    "frames":   (None,),
+}
+
+FSDP_RULES = dict(BASE_RULES)
+FSDP_RULES.update({
+    "ff":        (("model", "data", "pod"), ("model", "data"), ("model",), None),
+    "expert_ff": (("model", "data", "pod"), ("model", "data"), ("model",), None),
+    # contraction-FSDP expert layout (hillclimb H1): d over data, ff TP-only
+    "embed_fsdp": (("data", "pod"), ("data",), None),
+    "expert_ff_tp": (("model",), None),
+})
+BASE_RULES.update({  # present under base profile too (resolve to safe TP)
+    "embed_fsdp": (None,),
+    "expert_ff_tp": (("model",), None),
+})
+
+SEQ_PARALLEL_RULES = {
+    # context parallelism for long decode: KV cache sharded on data
+    "kv_seq": (("data",), None),
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    rules: dict
+    mesh: Optional[Mesh] = None
+    fallbacks: list = dataclasses.field(default_factory=list)
+
+    def spec(self, logical_axes: tuple, shape: tuple = None) -> P:
+        """Resolve logical axes -> PartitionSpec, honoring divisibility."""
+        assert shape is None or len(shape) == len(logical_axes), \
+            f"{logical_axes} vs {shape}"
+        out = []
+        used = set()
+        for d, name in enumerate(logical_axes):
+            if name is None:
+                out.append(None)
+                continue
+            cands = self.rules.get(name, (None,))
+            chosen = None
+            for cand in cands:
+                if cand is None:
+                    break
+                axes = cand if isinstance(cand, tuple) else (cand,)
+                if any(a in used for a in axes):
+                    continue
+                if self.mesh is not None:
+                    if any(a not in self.mesh.shape for a in axes):
+                        continue
+                    size = 1
+                    for a in axes:
+                        size *= self.mesh.shape[a]
+                    if shape is not None and shape[d] % size != 0:
+                        self.fallbacks.append((logical_axes, name, cand, shape))
+                        continue
+                chosen = axes
+                break
+            if chosen is None:
+                out.append(None)
+            else:
+                used.update(chosen)
+                out.append(chosen[0] if len(chosen) == 1 else tuple(chosen))
+        return P(*out)
+
+    def sharding(self, logical_axes: tuple, shape: tuple = None):
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.rules: Optional[ShardingRules] = None
+
+
+_CTX = _Ctx()
+
+
+class use_rules:
+    """Context manager installing the active ShardingRules (or None)."""
+
+    def __init__(self, rules: Optional[ShardingRules]):
+        self.rules = rules
+
+    def __enter__(self):
+        self.prev = _CTX.rules
+        _CTX.rules = self.rules
+        return self.rules
+
+    def __exit__(self, *exc):
+        _CTX.rules = self.prev
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _CTX.rules
+
+
+def shard(x, *logical_axes):
+    """Annotate an activation with logical axes (no-op without rules/mesh)."""
+    r = _CTX.rules
+    if r is None or r.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, r.spec(tuple(logical_axes), x.shape)))
+
+
+def make_rules(profile: str = "base", mesh: Optional[Mesh] = None,
+               seq_parallel_kv: bool = False) -> ShardingRules:
+    """Profiles: "base", "fsdp", and "_sp"-suffixed variants that shard the
+    residual-stream sequence dim over model (Megatron-SP: layer-boundary
+    activations and remat carries shrink 16x; attention/MLP gather as needed
+    — the used-axes resolver keeps q/k/v head-sharded, so GSPMD inserts the
+    seq all-gather before attention and reduce-scatters after)."""
+    seq_sharded = profile.endswith("_sp")
+    base = profile.removesuffix("_sp")
+    rules = dict(FSDP_RULES if base == "fsdp" else BASE_RULES)
+    if seq_sharded:
+        rules["seq"] = (("model",), None)
+    if seq_parallel_kv:
+        rules.update(SEQ_PARALLEL_RULES)
+    return ShardingRules(rules=rules, mesh=mesh)

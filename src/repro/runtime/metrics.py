@@ -1,0 +1,38 @@
+"""Step metrics: JSONL logger + throughput/MFU accounting."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+class MetricsLogger:
+    def __init__(self, path: str | None = None, print_every: int = 10):
+        self.path = path
+        self.print_every = print_every
+        self._fh = open(path, "a") if path else None
+        self._t0 = time.perf_counter()
+
+    def log(self, step: int, metrics: dict, tokens_per_step: int = 0,
+            peak_flops_per_s: float = 0.0, model_flops_per_token: float = 0.0):
+        rec = {"step": step, "wall_s": time.perf_counter() - self._t0}
+        rec.update({k: float(v) for k, v in metrics.items()})
+        if tokens_per_step:
+            dt = rec["wall_s"] / max(step + 1, 1)
+            rec["tokens_per_s"] = tokens_per_step / dt
+            if peak_flops_per_s and model_flops_per_token:
+                rec["mfu"] = (rec["tokens_per_s"] * model_flops_per_token
+                              / peak_flops_per_s)
+        if self._fh:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+        if step % self.print_every == 0:
+            msg = "  ".join(f"{k}={v:.4g}" for k, v in rec.items()
+                            if k != "wall_s")
+            print(f"[metrics] {msg}", flush=True)
+        return rec
+
+    def close(self):
+        if self._fh:
+            self._fh.close()

@@ -1,0 +1,157 @@
+"""Distributed train step.
+
+``make_train_step`` builds a jit-able function
+    (state, batch) -> (state, metrics)
+with:
+  * next-token CE loss (model-provided),
+  * optional gradient accumulation (lax.scan over microbatches — activation
+    memory / global batch decoupling),
+  * AdamW + global-norm clipping, fp32 ZeRO-1 moments,
+  * optional cross-pod int8+EF gradient compression (shard_map manual over
+    the "pod" mesh axis, auto over data/model — see optim.compress).
+
+``TrainState`` is a plain pytree so checkpointing/resharding is trivial.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw as adamw_lib
+from repro.optim import compress as compress_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+    ef: Any = None        # error-feedback residuals (compressed mode only)
+
+
+def init_state(params, compress: bool = False) -> TrainState:
+    return TrainState(
+        params=params, opt=adamw_lib.init_moments(params),
+        step=jnp.zeros((), jnp.int32),
+        ef=compress_lib.init_error_feedback(params) if compress else None)
+
+
+def make_train_step(loss_fn: Callable, schedule: Callable,
+                    opt_cfg: adamw_lib.AdamWConfig = adamw_lib.AdamWConfig(),
+                    accum_steps: int = 1,
+                    compress_axis: Optional[str] = None):
+    """loss_fn(params, batch) -> scalar.  batch leading dim must be divisible
+    by accum_steps (microbatch split happens on the batch axis)."""
+
+    def grads_of(params, batch):
+        if accum_steps == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def micro(carry, mb):
+            acc_loss, acc_g = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (acc_loss + l,
+                    jax.tree.map(jnp.add, acc_g, g)), None
+
+        micro_batches = jax.tree.map(
+            lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                + x.shape[1:]), batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+        from repro.models.scan_util import scan as _scan
+        (loss, grads), _ = _scan(micro, (jnp.zeros((), jnp.float32),
+                                         zero), micro_batches)
+        inv = 1.0 / accum_steps
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def step_fn(state: TrainState, batch) -> tuple[TrainState, dict]:
+        loss, grads = grads_of(state.params, batch)
+        ef = state.ef
+        if compress_axis is not None:
+            grads, ef = compress_lib.compress_tree(grads, ef, compress_axis)
+            loss = jax.lax.pmean(loss, compress_axis)
+        lr = schedule(state.step)
+        new_params, new_opt, m = adamw_lib.apply_adamw(
+            state.params, grads, state.opt, lr, opt_cfg)
+        if compress_axis is not None:  # metrics must be pod-invariant
+            m = {k: jax.lax.pmean(v, compress_axis) for k, v in m.items()}
+        metrics = {"loss": loss, "lr": lr, **m,
+                   "step": state.step.astype(jnp.float32)}
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1, ef=ef), metrics
+
+    return step_fn
+
+
+def podify_state(state: TrainState, n_pods: int) -> TrainState:
+    """Give params/moments a leading pod axis (sharded P("pod") this is
+    byte-identical to replication: each pod holds its own copy) so the
+    compressed step's state is honestly *pod-varying* in shard_map's value
+    type system — the int8 all-gather keeps the copies numerically
+    synchronized, but no invariance proof is required."""
+    lead = lambda t: jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_pods,) + a.shape), t)
+    return TrainState(params=lead(state.params),
+                      opt={"m": lead(state.opt["m"]),
+                           "v": lead(state.opt["v"]),
+                           "count": state.opt["count"]},
+                      step=state.step,
+                      ef=state.ef if state.ef is not None
+                      else compress_lib.init_error_feedback(state.params,
+                                                            n_pods))
+
+
+def podded_state_specs(params_tree) -> "TrainState":
+    from jax.sharding import PartitionSpec as P
+    pod = jax.tree.map(lambda _: P("pod"), params_tree)
+    return TrainState(params=pod,
+                      opt={"m": pod, "v": pod, "count": P()},
+                      step=P(), ef=pod)
+
+
+def make_compressed_crosspod_step(loss_fn, schedule, mesh, state_specs,
+                                  batch_spec,
+                                  opt_cfg=adamw_lib.AdamWConfig(),
+                                  accum_steps: int = 1):
+    """Cross-pod compressed variant: shard_map manual over "pod", auto over
+    the remaining mesh axes, so the model math stays GSPMD-partitioned while
+    the pod-axis gradient sync is an explicit int8 all-gather (optim.compress).
+
+    ``state_specs`` should come from :func:`podded_state_specs` and the state
+    from :func:`podify_state`: params/moments carry a leading pod-block axis
+    (storage-identical to replication) so every value's pod-varying type is
+    exact and check_vma passes without laundering collectives.  Partial-
+    manual note: specs may only name the manual axis "pod"; data/model
+    sharding is GSPMD-auto inside."""
+    from jax.sharding import PartitionSpec as P
+    from repro.models.scan_util import vma_axes
+    inner = make_train_step(loss_fn, schedule, opt_cfg, accum_steps,
+                            compress_axis="pod")
+
+    def inner_vma(state, batch):
+        # squeeze the pod-block axis; EF keeps its lead axis handling
+        sq = lambda t: jax.tree.map(lambda a: a[0], t)
+        local = TrainState(params=sq(state.params),
+                           opt={"m": sq(state.opt["m"]),
+                                "v": sq(state.opt["v"]),
+                                "count": state.opt["count"]},
+                           step=state.step, ef=state.ef)
+        with vma_axes(("pod",)):   # scan carries derive from pod-local data
+            new, metrics = inner(local, batch)
+        ex = lambda t: jax.tree.map(lambda a: a[None], t)
+        out = TrainState(params=ex(new.params),
+                         opt={"m": ex(new.opt["m"]), "v": ex(new.opt["v"]),
+                              "count": new.opt["count"]},
+                         step=new.step, ef=new.ef)
+        return out, metrics
+
+    return jax.jit(jax.shard_map(
+        inner_vma, mesh=mesh, in_specs=(state_specs, batch_spec),
+        out_specs=(state_specs, P()), check_vma=True,
+        axis_names={"pod"}))

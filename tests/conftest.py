@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets its own 512-device
+# flag in a separate process).  Keep hypothesis deadlines off: CI boxes jit.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("repro", deadline=None, max_examples=25)
+settings.load_profile("repro")

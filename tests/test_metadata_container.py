@@ -1,0 +1,96 @@
+"""§4.3 metadata serialization + container formats."""
+
+import numpy as np
+import pytest
+
+from repro.core.rans import RansParams, StaticModel
+from repro.core import container, conventional, metadata, recoil
+from repro.core.vectorized import encode_interleaved_fast
+
+
+def _enc(n=25_000, ways=32, n_bits=11, seed=0):
+    rng = np.random.default_rng(seed)
+    syms = np.minimum(rng.exponential(50, size=n).astype(np.int64), 255)
+    params = RansParams(n_bits=n_bits, ways=ways)
+    model = StaticModel.from_symbols(syms, 256, params)
+    return syms, model, encode_interleaved_fast(syms, model)
+
+
+@pytest.mark.parametrize("n_threads", [1, 2, 16, 100])
+def test_plan_serialization_roundtrip(n_threads):
+    syms, model, enc = _enc()
+    plan = recoil.plan_splits(enc, n_threads)
+    blob = metadata.serialize_plan(plan)
+    back = metadata.deserialize_plan(blob)
+    assert back.n_symbols == plan.n_symbols
+    assert back.n_words == plan.n_words
+    assert back.ways == plan.ways
+    assert len(back.points) == len(plan.points)
+    for a, b in zip(plan.points, back.points):
+        assert a.offset == b.offset
+        assert (a.k == b.k).all()
+        assert (a.y == b.y).all()
+    out = recoil.decode_recoil(back, enc.stream, enc.final_states, model)
+    assert (out == syms).all()
+
+
+def test_metadata_cost_close_to_paper():
+    """~76 B/split at W=32 (paper: 165 KB / 2176 splits)."""
+    syms, model, enc = _enc(n=400_000)
+    plan = recoil.plan_splits(enc, 256)
+    per_split = len(metadata.serialize_plan(plan)) / len(plan.points)
+    assert 66 <= per_split <= 90, per_split
+
+
+def test_combined_plan_serializes_smaller():
+    syms, model, enc = _enc(n=200_000)
+    plan = recoil.plan_splits(enc, 128)
+    small = recoil.combine_plan(plan, 16)
+    assert len(metadata.serialize_plan(small)) < \
+        len(metadata.serialize_plan(plan)) / 4
+
+
+def test_container_single_and_recoil():
+    syms, model, enc = _enc()
+    plan = recoil.plan_splits(enc, 20)
+    for buf, kind in [(container.pack_single(enc, model), container.KIND_SINGLE),
+                      (container.pack_recoil(enc, model, plan),
+                       container.KIND_RECOIL)]:
+        pc = container.parse(buf, model.params)
+        assert pc.kind == kind
+        assert pc.n_symbols == len(syms)
+        assert (pc.stream == enc.stream).all()
+        assert (pc.final_states == enc.final_states).all()
+        assert (pc.model.f == model.f).all()
+    sb = container.size_breakdown(enc=enc, model=model, plan=plan)
+    assert sb.total == len(container.pack_recoil(enc, model, plan))
+    sb0 = container.size_breakdown(enc=enc, model=model)
+    assert sb0.total == len(container.pack_single(enc, model))
+
+
+def test_container_conventional():
+    syms, model, enc = _enc()
+    conv = conventional.encode_conventional(syms, model, 8)
+    buf = container.pack_conventional(conv, model)
+    pc = container.parse(buf, model.params)
+    assert pc.kind == container.KIND_CONV
+    got = np.concatenate(pc.conv_streams)
+    assert (got == conv.concatenated()[0]).all()
+    assert (pc.conv_finals == np.stack(
+        [p.final_states for p in conv.partitions])).all()
+    sb = container.size_breakdown(conv=conv, model=model)
+    assert sb.total == len(buf)
+
+
+def test_recoil_overhead_beats_conventional_per_split():
+    """The paper's core rate claim at matched parallelism (Tables 5-6)."""
+    syms, model, enc = _enc(n=500_000)
+    plan = recoil.plan_splits(enc, 256)
+    rec = container.size_breakdown(enc=enc, model=model, plan=plan)
+    conv = conventional.encode_conventional(syms, model, 256)
+    cv = container.size_breakdown(conv=conv, model=model)
+    assert rec.overhead < cv.overhead
+    # and the conversion large->small recovers almost all of it
+    small = recoil.combine_plan(plan, 16)
+    rec16 = container.size_breakdown(enc=enc, model=model, plan=small)
+    assert rec16.overhead < rec.overhead / 8

@@ -1,0 +1,99 @@
+"""Property-based tests of the rANS substrate (paper Defs 2.1/2.2, Lemma 3.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rans import (RansParams, StaticModel, build_cdf, decode_scalar,
+                             encode_scalar, quantize_pdf)
+from repro.core.interleaved import decode_interleaved, encode_interleaved
+from repro.core import bitio
+
+
+@st.composite
+def symbol_streams(draw):
+    alphabet = draw(st.integers(2, 300))
+    n = draw(st.integers(1, 800))
+    data = draw(st.lists(st.integers(0, alphabet - 1), min_size=n, max_size=n))
+    n_bits = draw(st.sampled_from([8, 11, 12, 16]))
+    return np.asarray(data), alphabet, n_bits
+
+
+@given(symbol_streams())
+def test_scalar_roundtrip(case):
+    syms, alphabet, n_bits = case
+    if alphabet > (1 << n_bits):
+        return
+    params = RansParams(n_bits=n_bits, ways=1)
+    model = StaticModel.from_symbols(syms, alphabet, params)
+    stream, final = encode_scalar(syms, model)
+    out = decode_scalar(stream, final, len(syms), model)
+    assert (out == syms).all()
+
+
+@given(symbol_streams(), st.sampled_from([2, 4, 32]))
+def test_interleaved_roundtrip_and_lemma31(case, ways):
+    syms, alphabet, n_bits = case
+    if alphabet > (1 << n_bits):
+        return
+    params = RansParams(n_bits=n_bits, ways=ways)
+    model = StaticModel.from_symbols(syms, alphabet, params)
+    enc = encode_interleaved(syms, model)
+    assert (decode_interleaved(enc, model) == syms).all()
+    # Lemma 3.1: every post-renorm intermediate state is < L
+    if enc.n_words:
+        assert int(enc.y_of_word.max()) < params.lower_bound
+        # emission log symbol indices strictly increase (one per symbol max)
+        assert (np.diff(enc.k_of_word) > 0).all()
+
+
+@given(st.lists(st.integers(0, 10_000), min_size=1, max_size=64),
+       st.sampled_from([8, 11, 16]))
+def test_quantize_pdf_mass(counts, n_bits):
+    counts = np.asarray(counts, dtype=np.int64)
+    if counts.sum() == 0 or np.count_nonzero(counts) > (1 << n_bits):
+        return
+    f = quantize_pdf(counts, n_bits)
+    assert int(f.sum()) == 1 << n_bits
+    assert ((f > 0) == (counts > 0)).all() or (f[counts > 0] > 0).all()
+    F = build_cdf(f)
+    assert F[0] == 0 and int(F[-1]) == 1 << n_bits
+
+
+@given(st.lists(st.integers(-2**31, 2**31 - 1), min_size=0, max_size=200),
+       st.booleans())
+def test_series_roundtrip(values, signed):
+    values = np.asarray(values, dtype=np.int64)
+    if not signed and (values < 0).any():
+        values = np.abs(values)
+    w = bitio.BitWriter()
+    bitio.write_series(w, values, width_field_bits=6, signed=signed)
+    r = bitio.BitReader(w.getvalue())
+    out = bitio.read_series(r, len(values), width_field_bits=6, signed=signed)
+    assert (out == values).all()
+
+
+@given(st.lists(st.tuples(st.integers(0, 2**20 - 1), st.integers(1, 20)),
+                max_size=60))
+def test_bitio_mixed_writes(pairs):
+    w = bitio.BitWriter()
+    wrote = []
+    for v, nb in pairs:
+        if v < (1 << nb):
+            w.write(v, nb)
+            wrote.append((v, nb))
+    r = bitio.BitReader(w.getvalue())
+    for v, nb in wrote:
+        assert r.read(nb) == v
+
+
+def test_zigzag():
+    v = np.asarray([0, -1, 1, -2, 2, -2**40, 2**40])
+    assert (bitio.zigzag_decode(bitio.zigzag_encode(v)) == v).all()
+
+
+def test_params_validation():
+    with pytest.raises(ValueError):
+        RansParams(n_bits=17)
+    with pytest.raises(ValueError):
+        RansParams(n_bits=11, b_bits=8)  # b >= n required

@@ -1,0 +1,137 @@
+"""Recoil split semantics vs the sequential oracle (paper §3-4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rans import RansParams, StaticModel
+from repro.core.interleaved import encode_interleaved
+from repro.core import adaptive, conventional, recoil
+from repro.core.vectorized import (decode_conventional_fast, decode_recoil_fast,
+                                   encode_interleaved_fast)
+
+
+def _make(seed=0, n=30_000, ways=32, n_bits=11, lam=40.0):
+    rng = np.random.default_rng(seed)
+    syms = np.minimum(rng.exponential(lam, size=n).astype(np.int64), 255)
+    params = RansParams(n_bits=n_bits, ways=ways)
+    model = StaticModel.from_symbols(syms, 256, params)
+    enc = encode_interleaved_fast(syms, model)
+    return syms, model, enc
+
+
+@pytest.mark.parametrize("ways", [4, 32])
+@pytest.mark.parametrize("n_bits", [11, 16])
+@pytest.mark.parametrize("n_threads", [1, 2, 7, 64])
+def test_recoil_decode_matches_input(ways, n_bits, n_threads):
+    syms, model, enc = _make(ways=ways, n_bits=n_bits)
+    plan = recoil.plan_splits(enc, n_threads)
+    out = recoil.decode_recoil(plan, enc.stream, enc.final_states, model)
+    assert (out == syms).all()
+
+
+def test_fast_encoder_bit_exact_vs_oracle():
+    syms, model, _ = _make(n=7_001)
+    slow = encode_interleaved(syms, model)
+    fast = encode_interleaved_fast(syms, model)
+    assert (slow.stream == fast.stream).all()
+    assert (slow.final_states == fast.final_states).all()
+    assert (slow.k_of_word == fast.k_of_word).all()
+    assert (slow.y_of_word == fast.y_of_word).all()
+
+
+@given(st.integers(0, 2**31), st.sampled_from([2, 5, 16, 40]),
+       st.sampled_from([1, 3, 8]))
+@settings(max_examples=10)
+def test_combining_preserves_decode(seed, n_threads, combined):
+    syms, model, enc = _make(seed=seed, n=12_000)
+    plan = recoil.plan_splits(enc, n_threads)
+    thinned = recoil.combine_plan(plan, combined)
+    assert thinned.n_threads <= min(plan.n_threads, max(combined, 1))
+    out = recoil.decode_recoil(thinned, enc.stream, enc.final_states, model)
+    assert (out == syms).all()
+    # combining never touches the bitstream or final states — only metadata
+    assert thinned.n_words == plan.n_words
+    assert set(p.offset for p in thinned.points) <= \
+        set(p.offset for p in plan.points)
+
+
+def test_plan_invariants():
+    syms, model, enc = _make(n=50_000)
+    plan = recoil.plan_splits(enc, 48)
+    plan.validate()
+    offs = [p.offset for p in plan.points]
+    comps = [p.completion for p in plan.points]
+    assert offs == sorted(offs) and len(set(offs)) == len(offs)
+    assert comps == sorted(comps) and len(set(comps)) == len(comps)
+    for pt in plan.points:
+        # bounded states (Lemma 3.1) and way-aligned indices
+        assert int(pt.y.max()) < model.params.lower_bound
+        assert (pt.k % plan.ways == np.arange(plan.ways)).all()
+        # anchor word is the last emission at or below the split offset
+        assert enc.k_of_word[pt.offset] == pt.anchor
+
+
+def test_sync_section_double_read_accounting():
+    """Each split's sync-section words are read exactly twice (side effects
+    + cross-boundary), everything else once."""
+    syms, model, enc = _make(n=20_000)
+    plan = recoil.plan_splits(enc, 9)
+    states = recoil.build_split_states(plan, enc.final_states)
+    from repro.core.interleaved import walk_decode_split
+    out = np.full(len(syms), -1, dtype=np.int64)
+    consumed = sum(walk_decode_split(s, enc.stream, model, out)
+                   for s in states)
+    double = 0
+    for pt in plan.points:
+        lo, hi = pt.completion, pt.anchor
+        double += int(((enc.k_of_word >= lo) & (enc.k_of_word <= hi)).sum())
+    assert consumed == enc.n_words + double
+    assert (out == syms).all()
+
+
+def test_vectorized_matches_oracle():
+    syms, model, enc = _make(n=40_000)
+    for m in (1, 6, 50):
+        plan = recoil.plan_splits(enc, m)
+        fast = decode_recoil_fast(plan, enc.stream, enc.final_states, model)
+        assert (fast == syms).all()
+
+
+@pytest.mark.parametrize("parts", [1, 3, 16])
+def test_conventional_baseline(parts):
+    syms, model, enc = _make(n=20_000)
+    conv = conventional.encode_conventional(syms, model, parts)
+    assert (conventional.decode_conventional(conv, model) == syms).all()
+    assert (conventional.decode_conventional_walk(conv, model) == syms).all()
+    assert (decode_conventional_fast(conv, model) == syms).all()
+    # more partitions -> more overhead, monotone (paper Fig. 3 trend)
+    if parts > 1:
+        conv1 = conventional.encode_conventional(syms, model, 1)
+        assert conv.overhead_bytes() > conv1.overhead_bytes()
+
+
+def test_adaptive_index_keyed_decode():
+    rng = np.random.default_rng(3)
+    params = RansParams(n_bits=12, ways=32)
+    N = 15_000
+    ctx = (np.arange(N) % 8).astype(np.int32)
+    scales = np.linspace(3.0, 50.0, 8)
+    am = adaptive.ContextModel.from_scale_table(scales, ctx, 256, params)
+    syms = np.clip(rng.normal(128, scales[ctx]).round(), 0, 255).astype(np.int64)
+    enc = adaptive.encode_interleaved_adaptive(syms, am)
+    plan = recoil.plan_splits(enc, 12)
+    out = adaptive.decode_recoil_adaptive(plan, enc.stream, enc.final_states, am)
+    assert (out == syms).all()
+    fast = decode_recoil_fast(plan, enc.stream, enc.final_states, None,
+                              ctx_model=am)
+    assert (fast == syms).all()
+
+
+def test_tiny_stream_graceful():
+    """Streams too small for the requested parallelism yield fewer threads."""
+    syms, model, enc = _make(n=40)
+    plan = recoil.plan_splits(enc, 64)
+    assert plan.n_threads <= 64
+    out = recoil.decode_recoil(plan, enc.stream, enc.final_states, model)
+    assert (out == syms).all()

@@ -1,0 +1,181 @@
+"""Training runtime: optimization, accumulation, checkpointing, fault
+tolerance, metrics."""
+
+import os
+import signal
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.models.model import LM
+from repro.optim import compress
+from repro.optim.adamw import AdamWConfig, global_norm
+from repro.optim.schedule import constant, cosine_with_warmup
+from repro.runtime import fault
+from repro.runtime.train import init_state, make_train_step
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _setup(arch="granite_3_2b", accum=1):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg, param_dtype=jnp.float32)
+    params = lm.init(RNG)
+    step = jax.jit(make_train_step(lm.loss, constant(1e-3),
+                                   accum_steps=accum))
+    data = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                      global_batch=8))
+    return lm, params, step, data
+
+
+def test_loss_decreases():
+    lm, params, step, data = _setup()
+    state = init_state(params)
+    losses = []
+    for t in range(10):
+        state, m = step(state, {"tokens": jnp.asarray(data.batch(t)["tokens"])})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert float(m["grad_norm"]) > 0
+
+
+def test_grad_accumulation_equivalence():
+    """accum=2 over one batch == accum=1 (same data, same update)."""
+    lm, params, _, data = _setup()
+    batch = {"tokens": jnp.asarray(data.batch(0)["tokens"])}
+    s1 = init_state(params)
+    s2 = init_state(params)
+    step1 = jax.jit(make_train_step(lm.loss, constant(1e-3), accum_steps=1))
+    step2 = jax.jit(make_train_step(lm.loss, constant(1e-3), accum_steps=2))
+    s1, m1 = step1(s1, batch)
+    s2, m2 = step2(s2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    diff = global_norm(jax.tree.map(lambda a, b: a - b,
+                                    s1.params, s2.params))
+    assert float(diff) < 1e-3
+
+
+def test_schedule_shapes():
+    sched = cosine_with_warmup(1e-3, 10, 100)
+    assert float(sched(0)) == 0.0
+    assert abs(float(sched(10)) - 1e-3) < 1e-9
+    assert float(sched(100)) < float(sched(50)) < float(sched(10))
+
+
+def test_checkpoint_roundtrip_and_crc():
+    lm, params, step, data = _setup()
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(root=d, codec="raw", keep=2)
+        mgr.save(5, {"params": params})
+        mgr.save(9, {"params": params})
+        assert mgr.latest() == 9
+        tree, s = mgr.restore()
+        assert s == 9
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(tree["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # corrupt a leaf -> crc error
+        d9 = mgr._step_dir(9)
+        victim = next(f for f in os.listdir(d9) if f.endswith(".npy"))
+        with open(os.path.join(d9, victim), "r+b") as f:
+            f.seek(120)
+            f.write(b"\xde\xad")
+        with pytest.raises(IOError):
+            mgr.restore(9)
+
+
+def test_checkpoint_recoil_codec_and_thinning():
+    lm, params, *_ = _setup()
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(root=d, codec="recoil", recoil_splits=64)
+        mgr.save(1, {"params": params})
+        for threads in (1, 4, 64):
+            tree, _ = mgr.restore(1, n_threads=threads)
+            a = np.asarray(params["embed"], np.float32)
+            b = np.asarray(tree["params"]["embed"], np.float32)
+            rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+            assert rel < 2e-2  # int8 quantization bound
+
+
+def test_checkpoint_async_and_keep():
+    lm, params, *_ = _setup()
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(root=d, codec="raw", keep=2)
+        for s in (1, 2, 3):
+            mgr.save_async(s, {"params": params})
+            mgr.wait()
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(d))
+        assert steps == [2, 3]
+
+
+def test_preemption_guard():
+    with fault.PreemptionGuard(signals=(signal.SIGUSR1,)) as guard:
+        assert not guard.preempted
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert guard.preempted
+
+
+def test_straggler_monitor():
+    mon = fault.StragglerMonitor(n_hosts=8, windows=3)
+    for _ in range(6):
+        times = [100.0] * 8
+        times[5] = 400.0  # persistent straggler
+        reports = mon.observe(times)
+    assert any(r.host == 5 for r in reports)
+    # recovered host stops being flagged once its EMA re-converges
+    mon2 = fault.StragglerMonitor(n_hosts=4, windows=2)
+    mon2.observe([100, 100, 100, 500])
+    for _ in range(20):
+        reports = mon2.observe([100, 100, 100, 100])
+    assert not reports
+
+
+def test_elastic_mesh_shape():
+    assert fault.elastic_mesh_shape(512, 16, pod_size=256) == (2, 16, 16)
+    assert fault.elastic_mesh_shape(384, 16, pod_size=256) == (1, 16, 16)
+    assert fault.elastic_mesh_shape(192, 16) == (1, 12, 16)
+    with pytest.raises(ValueError):
+        fault.elastic_mesh_shape(8, 16)
+
+
+def test_run_with_retries():
+    calls = {"n": 0}
+
+    def flaky(state, batch):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return state + 1, {}
+
+    wrapped = fault.run_with_retries(flaky, restore_fn=lambda: 0,
+                                     max_retries=3)
+    state, _ = wrapped(0, None)
+    assert state == 1 and calls["n"] == 3
+
+
+def test_compress_quantize_roundtrip_bounds():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(4097,)).astype(np.float32))
+    q, scale = compress.quantize_int8(g)
+    back = compress.dequantize_int8(q, scale, g.shape, g.size)
+    err = float(jnp.abs(back - g).max())
+    blk_max = float(jnp.abs(g).max())
+    assert err <= blk_max / 127.0 + 1e-6
+
+
+def test_compress_error_feedback_converges():
+    """With EF, repeated compression of a constant gradient averages to it."""
+    g = {"w": jnp.full((512,), 0.003, jnp.float32)}
+    ef = compress.init_error_feedback(g)
+    acc = jnp.zeros((512,))
+    for _ in range(50):
+        gh, ef = compress.compress_tree(g, ef, None)
+        acc = acc + gh["w"]
+    mean = acc / 50
+    np.testing.assert_allclose(np.asarray(mean), 0.003, rtol=2e-2)
