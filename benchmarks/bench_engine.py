@@ -1,0 +1,117 @@
+"""Decode-engine steady state: cache-warm DecoderSession vs the one-shot path.
+
+The one-shot flow (``walk_decode_batch`` per request) re-traces and
+re-compiles for every distinct input size because the walk's scan length and
+output size are static under jit — a server sweeping request sizes pays a
+compile per size.  The engine pads every shape knob to power-of-two buckets
+(DESIGN.md §4), so the whole sweep runs one AOT-compiled executable.
+
+Measured here (jnp impl; the Pallas kernel only runs in interpret mode on
+this container, which times Python, not hardware — EXPERIMENTS.md §Perf):
+
+  * cold:  one pass over ``len(SIZES)`` distinct request sizes through
+           ``walk_decode_batch`` — each size jit-compiles, as in production
+           today;
+  * warm:  the same requests through one ``DecoderSession`` after a single
+           warm-up pass — plus the recompile count across the measured
+           sweep, which must be 0 (all sizes share one bucket).
+
+Writes ``benchmarks/results/engine.json`` (the CI artifact) and returns CSV
+rows for the run.py driver.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import recoil
+from repro.core.engine import DecoderSession
+from repro.core.rans import RansParams, StaticModel
+from repro.core.recoil import build_split_states
+from repro.core.vectorized import (WalkBatch, encode_interleaved_fast,
+                                   walk_decode_batch)
+
+from . import datasets
+
+# Request-size sweeps chosen so stream words (~0.44 words/symbol on the
+# lam=50 exponential dataset), output symbols, and walk steps all land in
+# ONE shape bucket — the steady state the engine is built for.
+QUICK_SIZES = (1_600_000, 1_750_000, 1_900_000, 2_000_000)   # 2 MB dataset
+FULL_SIZES = (6_500_000, 7_200_000, 7_800_000, 8_300_000)    # 10 MB dataset
+N_SPLITS = 64
+
+
+def run(quick: bool = False, repeats: int = 3) -> list:
+    sizes = QUICK_SIZES if quick else FULL_SIZES
+    syms = datasets.rand_exponential(50, max(sizes))
+    params = RansParams(n_bits=11, ways=32)
+    model = StaticModel.from_symbols(syms, 256, params)
+
+    reqs = []
+    for n in sizes:
+        enc = encode_interleaved_fast(syms[:n], model)
+        plan = recoil.plan_splits(enc, N_SPLITS)
+        batch = WalkBatch.from_splits(
+            build_split_states(plan, enc.final_states), plan.ways)
+        reqs.append({"n": n, "enc": enc, "plan": plan, "batch": batch})
+    sweep_mb = sum(n for n in sizes) / 1e6
+
+    # ---- correctness, untimed: both paths verified once up front (the
+    # timed regions below measure decode only, symmetrically)
+    sess = DecoderSession(model, impl="jnp")
+    for r in reqs:
+        r["ds"] = sess.upload_stream(r["enc"].stream)
+        out = np.asarray(
+            sess.decode(r["plan"], r["ds"], r["enc"].final_states))
+        assert (out == syms[:r["n"]]).all()
+        assert (walk_decode_batch(r["batch"], r["enc"].stream, model,
+                                  r["n"]) == syms[:r["n"]]).all()
+
+    # ---- cold: per-request one-shot flow; each distinct size re-compiles
+    # (clear jit caches so the verification pass above doesn't pre-warm it;
+    # the session's AOT executables are unaffected)
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    for r in reqs:
+        walk_decode_batch(r["batch"], r["enc"].stream, model, r["n"])
+    cold_s = time.perf_counter() - t0
+
+    # ---- warm: same requests through the resident session
+    compiles_before = sess.stats.compiles
+    warm_ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for r in reqs:
+            jax.block_until_ready(
+                sess.decode(r["plan"], r["ds"], r["enc"].final_states))
+        warm_ts.append(time.perf_counter() - t0)
+    warm_s = float(np.median(warm_ts))
+    recompiles = sess.stats.compiles - compiles_before
+
+    summary = {
+        "sizes": list(sizes),
+        "n_splits": N_SPLITS,
+        "sweep_mb": sweep_mb,
+        "cold_mb_per_s": round(sweep_mb / cold_s, 2),
+        "warm_mb_per_s": round(sweep_mb / warm_s, 2),
+        "speedup": round(cold_s / warm_s, 2),
+        "recompiles_warm_sweep": recompiles,
+        "engine_executables": len(sess._exec),
+        "engine_stats": sess.stats.snapshot(),
+    }
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/engine.json", "w") as f:
+        json.dump(summary, f, indent=2)
+
+    rows = [{"bench": "engine", "path": "cold_per_call", "sizes": len(sizes),
+             "mb_per_s": summary["cold_mb_per_s"],
+             "recompiles": len(sizes)},
+            {"bench": "engine", "path": "session_warm", "sizes": len(sizes),
+             "mb_per_s": summary["warm_mb_per_s"],
+             "recompiles": recompiles}]
+    return rows

@@ -21,6 +21,7 @@ import time
 import numpy as np
 
 from repro.core import conventional, recoil
+from repro.core.engine import DecoderSession
 from repro.core.rans import RansParams, StaticModel
 from repro.core.recoil import build_split_states
 from repro.core.vectorized import (WalkBatch, encode_interleaved_fast,
@@ -50,15 +51,26 @@ def run(size: int = 0, quick: bool = False, repeats: int = 3) -> list:
         model = StaticModel.from_symbols(syms, 256, params)
         enc = encode_interleaved_fast(syms, model)
         configs = [("single_thread", 1), ("recoil", 16), ("recoil", 256),
-                   ("recoil", 2176), ("conventional", 16),
-                   ("conventional", 2176)]
+                   ("recoil", 2176), ("recoil_engine", 256),
+                   ("conventional", 16), ("conventional", 2176)]
         plan_max = recoil.plan_splits(enc, 2176)
+        sess = DecoderSession(model, impl="jnp")
+        stream_dev = sess.upload_stream(enc.stream)
         for variant, m in configs:
             if variant == "conventional":
                 conv = conventional.encode_conventional(syms, model, m)
                 states, words, bases = to_split_states(conv)
                 batch = WalkBatch.from_splits(states, 32, bases)
                 fn = lambda: walk_decode_batch(batch, words, model, len(syms))
+            elif variant == "recoil_engine":
+                # warm DecoderSession at matched parallelism: same walk and
+                # same prebuilt batch as the `recoil` rows, but stream
+                # resident and executable cached (DESIGN.md §4)
+                plan = recoil.combine_plan(plan_max, m)
+                states = build_split_states(plan, enc.final_states)
+                batch = WalkBatch.from_splits(states, 32)
+                fn = lambda: np.asarray(sess.decode_batch(
+                    batch, stream_dev, len(syms)))
             else:
                 plan = recoil.combine_plan(plan_max, m)
                 states = build_split_states(plan, enc.final_states)

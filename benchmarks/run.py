@@ -8,6 +8,7 @@ Emits CSV to stdout and benchmarks/results/*.csv.  Suites:
     partition_sweep   Figure 3     size vs #partitions, Conventional vs Recoil
     throughput        Figure 7     CPU decode MB/s at matched parallelism
     combine           §3.3         server-side metadata thinning latency
+    engine            DESIGN §4    cache-warm DecoderSession vs one-shot path
     roofline          §Roofline    aggregates dry-run JSONs (if present)
 """
 
@@ -19,14 +20,15 @@ import os
 import sys
 import time
 
-from . import (bench_combine, bench_compression, bench_partition_sweep,
-               bench_roofline, bench_throughput)
+from . import (bench_combine, bench_compression, bench_engine,
+               bench_partition_sweep, bench_roofline, bench_throughput)
 
 SUITES = {
     "compression": bench_compression.run,
     "partition_sweep": bench_partition_sweep.run,
     "throughput": bench_throughput.run,
     "combine": bench_combine.run,
+    "engine": bench_engine.run,
     "roofline": bench_roofline.run,
 }
 
@@ -35,7 +37,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small datasets / fewer variants (CI mode)")
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="", choices=["", *SUITES])
     args = ap.parse_args()
     os.makedirs("benchmarks/results", exist_ok=True)
     names = [args.only] if args.only else list(SUITES)

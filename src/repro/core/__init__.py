@@ -11,6 +11,8 @@ Public API (see DESIGN.md §1 for the mapping to paper sections):
   conventional — partitioning-symbols baseline (§2.3)
   adaptive     — index-keyed distributions (§3.1 advantage 3, div2k tests)
   container    — on-wire formats for variations (a)-(e)
+  engine       — persistent DecoderSession (device-resident tables, bucketed
+                 executable cache; DESIGN.md §4)
 """
 
 from .rans import DEFAULT_PARAMS, RansParams, StaticModel  # noqa: F401
@@ -24,3 +26,5 @@ from .conventional import (ConventionalEncoded, decode_conventional,  # noqa: F4
 from .vectorized import (WalkBatch, decode_conventional_fast,  # noqa: F401
                          decode_recoil_fast, encode_interleaved_fast,
                          walk_decode_batch)
+from .engine import (DecoderSession, DeviceStream,  # noqa: F401
+                     pow2_bucket, work_bucket)

@@ -139,7 +139,7 @@ class WalkBatch:
     stop: np.ndarray     # int32[S]
     keep_lo: np.ndarray  # int32[S]
     keep_hi: np.ndarray  # int32[S]
-    out_base: np.ndarray  # int64[S] — global output offset (conventional adapter)
+    out_base: np.ndarray  # int32[S] — global output offset (conventional adapter)
     n_steps: int
     ways: int
 
@@ -156,14 +156,26 @@ class WalkBatch:
         g_hi = start // ways
         g_lo = stop // ways
         n_steps = int((g_hi - g_lo + 1).max()) if S else 0
+        if out_bases is None:
+            out_base = np.zeros(S, np.int32)
+        else:
+            # The device scatter indexes with int32: global positions
+            # (out_base + local index) must fit, so fail loudly here instead
+            # of wrapping in the kernel.
+            out_bases = np.asarray(out_bases)
+            tops = out_bases + np.asarray([s.keep_hi for s in splits])
+            if S and int(tops.max()) >= 2 ** 31:
+                raise ValueError(
+                    f"global output index {int(tops.max())} exceeds int32; "
+                    ">2^31-symbol batches are not supported by the device "
+                    "scatter")
+            out_base = out_bases.astype(np.int32)
         return cls(
             k=k, y=y, x0=x0, q0=q0, g_hi=g_hi.astype(np.int32),
             start=start, stop=stop,
             keep_lo=np.asarray([s.keep_lo for s in splits], np.int32),
             keep_hi=np.asarray([s.keep_hi for s in splits], np.int32),
-            out_base=(np.zeros(S, np.int32) if out_bases is None
-                      else np.asarray(out_bases, np.int32)),
-            n_steps=n_steps, ways=ways)
+            out_base=out_base, n_steps=n_steps, ways=ways)
 
 
 def _walk_one_split(stream: jax.Array, sym_lut: jax.Array, f_lut: jax.Array,
@@ -236,18 +248,20 @@ def _walk_batch_jit(stream, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi, start,
                              ctx_of_index=ctx_of_index)
     syms, keeps, qf = jax.vmap(walk)(k, y, x0, q0, g_hi, start, stop,
                                      keep_lo, keep_hi)
-    # Scatter kept symbols into the global output (unique positions by
-    # construction; dropped positions land on the padding slot).
+    # Scatter kept symbols into the global output.  Kept positions are unique
+    # by construction (disjoint [keep_lo, keep_hi) ranges) and dropped lanes
+    # are routed to index n_symbols — out of bounds, removed by mode="drop" —
+    # so unique_indices=True is honest and unlocks the faster lowering.
     S = k.shape[0]
     lanes = jnp.arange(ways, dtype=jnp.int32)
     t = jnp.arange(n_steps, dtype=jnp.int32)
     g = g_hi[:, None, None] - t[None, :, None]
     i = (g * ways + lanes[None, None, :]) + out_base[:, None, None]
     i = jnp.where(keeps, i, n_symbols)
-    out = jnp.full((n_symbols + 1,), -1, dtype=jnp.int32)
+    out = jnp.full((n_symbols,), -1, dtype=jnp.int32)
     out = out.at[i.reshape(-1)].set(syms.reshape(-1).astype(jnp.int32),
-                                    mode="drop", unique_indices=False)
-    return out[:n_symbols], qf
+                                    mode="drop", unique_indices=True)
+    return out, qf
 
 
 def walk_decode_batch(batch: WalkBatch, stream: np.ndarray, model: StaticModel,
@@ -260,6 +274,9 @@ def walk_decode_batch(batch: WalkBatch, stream: np.ndarray, model: StaticModel,
     ``packed_lut`` uses the paper §4.4 single-int32 slot table (n <= 12,
     8-bit symbols): one gather per step instead of three.
     """
+    if n_symbols >= 2 ** 31:
+        raise ValueError(
+            f"n_symbols={n_symbols} exceeds int32 device-scatter indices")
     if packed_lut and ctx_model is None:
         from .rans import pack_decode_lut
         packed = pack_decode_lut(model.f, model.F)

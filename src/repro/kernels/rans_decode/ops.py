@@ -6,22 +6,29 @@ Handles the host-side data plumbing around the kernel:
                        inert splits (``start = -1`` never activates);
   * slab building    — per-grid-block contiguous stream windows sized to the
                        block's worst-case word consumption (kernel VMEM bound;
-                       see rans_decode.py header), with slab-relative ``q0``;
+                       see rans_decode.py header), built with one vectorized
+                       strided gather, with slab-relative ``q0``;
   * scatter          — kernel emits (rows, T, 128) symbols (-1 = not kept);
                        positions are reconstructed closed-form from
-                       ``g_hi - t`` and scattered into the flat output.
+                       ``g_hi - t`` and scattered into the flat output ON
+                       DEVICE (the tile never round-trips to host numpy).
 
 ``decode(...)`` is the user entry point; ``impl='jnp'`` routes to the pure
 jnp batched walk (same math, no Pallas) for CPU-fast paths and A/B tests.
+For steady-state serving use :class:`repro.core.engine.DecoderSession`,
+which reuses this module's packing/slab/scatter plumbing behind a bucketed
+executable cache.
 """
 
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.rans import StaticModel
+from repro.core.rans import StaticModel, pack_decode_lut
 from repro.core.vectorized import WalkBatch, walk_decode_batch
 from .rans_decode import LANES, walk_decode_pallas
 
@@ -69,6 +76,27 @@ def pack_batch(batch: WalkBatch):
     return packed, per_split, rows, pack, S_pad
 
 
+def pad_to_rows(packed: dict, per_split: dict, rows: int, pack: int,
+                target_rows: int) -> int:
+    """Grow the lane-packed tiles to ``target_rows`` with inert splits
+    (``start = -1`` never activates), in place.  Returns the new row count."""
+    pad_rows = target_rows - rows
+    if pad_rows < 0:
+        raise ValueError(f"target_rows {target_rows} < packed rows {rows}")
+    if pad_rows:
+        for name, arr in packed.items():
+            fill = -1 if name == "start" else 0
+            if name == "k":
+                fill = 2 ** 30
+            packed[name] = np.concatenate(
+                [arr, np.full((pad_rows, LANES), fill, arr.dtype)], axis=0)
+        for name in ("q0", "g_hi", "out_base", "span"):
+            a = per_split[name]
+            per_split[name] = np.concatenate(
+                [a, np.zeros(pad_rows * pack, a.dtype)])
+    return target_rows
+
+
 def build_slabs(stream: np.ndarray, per_split: dict, rows: int, pack: int,
                 rows_per_block: int):
     """Per-block stream slabs.  A split consumes at most one word per walked
@@ -83,15 +111,26 @@ def build_slabs(stream: np.ndarray, per_split: dict, rows: int, pack: int,
     hi = q0.max(axis=1)
     width = int((hi - lo + 1).max())
     width = -(-width // 8) * 8
-    slabs = np.zeros((n_blocks, width), dtype=np.int32)
     stream32 = np.ascontiguousarray(stream).astype(np.uint32).astype(np.int32)
-    for b in range(n_blocks):
-        seg = stream32[lo[b]:hi[b] + 1]
-        slabs[b, :len(seg)] = seg
-    return slabs, lo
+    n = len(stream32)
+    if n == 0:
+        return np.zeros((n_blocks, width), dtype=np.int32), lo
+    # One strided gather builds every slab: block b's row reads
+    # stream[lo[b] + j] for j < hi[b]-lo[b]+1, zero elsewhere.
+    idx = lo[:, None] + np.arange(width, dtype=np.int64)[None, :]
+    valid = idx <= hi[:, None]
+    slabs = np.where(valid, stream32[np.minimum(idx, n - 1)], 0)
+    return np.ascontiguousarray(slabs.astype(np.int32)), lo
 
 
-def _luts(model: StaticModel):
+def packed_lut_ok(model: StaticModel) -> bool:
+    """True iff the §4.4 packed single-int32 LUT layout fits this model."""
+    return model.alphabet_size <= 256 and model.params.n_bits <= 12
+
+
+def _luts(model: StaticModel, packed: bool):
+    if packed:
+        return (jnp.asarray(pack_decode_lut(model.f, model.F)), None, None)
     lut = model.slot_lut()
     slot_f = model.f.astype(np.int32)[lut]
     slot_F = model.F[:-1].astype(np.int32)[lut]
@@ -101,33 +140,35 @@ def _luts(model: StaticModel):
 
 def decode(batch: WalkBatch, stream: np.ndarray, model: StaticModel,
            n_symbols: int, *, impl: str = "pallas", interpret: bool = True,
-           rows_per_block: int = 8) -> np.ndarray:
-    """Decode a planned WalkBatch into the flat symbol array."""
+           rows_per_block: int = 8, packed_lut: bool | None = None,
+           check: bool = True) -> jax.Array:
+    """Decode a planned WalkBatch into the flat symbol device array.
+
+    ``packed_lut=None`` (auto) uses the §4.4 packed LUT whenever the model
+    fits it (8-bit symbols, n <= 12); the result is bit-identical either way.
+    ``check`` asserts full output coverage (one device reduction + a host
+    sync; matches the jnp path's behavior — the engine's fused path skips
+    it to stay sync-free).
+    """
+    if packed_lut is None:
+        packed_lut = packed_lut_ok(model)
+    elif packed_lut and not packed_lut_ok(model):
+        raise ValueError("packed LUT requires 8-bit symbols and n <= 12")
     if impl == "jnp":
-        return walk_decode_batch(batch, stream, model, n_symbols)
+        return walk_decode_batch(batch, stream, model, n_symbols,
+                                 packed_lut=packed_lut)
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
     packed, per_split, rows, pack, S_pad = pack_batch(batch)
-    if rows % rows_per_block != 0:
-        pad_rows = -(-rows // rows_per_block) * rows_per_block - rows
-        for name, arr in packed.items():
-            fill = -1 if name == "start" else 0
-            if name == "k":
-                fill = 2 ** 30
-            packed[name] = np.concatenate(
-                [arr, np.full((pad_rows, LANES), fill, arr.dtype)], axis=0)
-        for name in ("q0", "g_hi", "out_base", "span"):
-            a = per_split[name]
-            per_split[name] = np.concatenate(
-                [a, np.zeros(pad_rows * pack, a.dtype)])
-        rows += pad_rows
-        S_pad = rows * pack
+    rows = pad_to_rows(packed, per_split, rows, pack,
+                       -(-rows // rows_per_block) * rows_per_block)
+    S_pad = rows * pack
     slabs, slab_lo = build_slabs(stream, per_split, rows, pack, rows_per_block)
     # q0 relative to the block slab
     n_blocks = rows // rows_per_block
     lo_rows = np.repeat(slab_lo, rows_per_block).astype(np.int32)
     q0_rel = packed["q0"] - lo_rows[:, None]
-    sym_lut, f_lut, F_lut = _luts(model)
+    sym_lut, f_lut, F_lut = _luts(model, packed_lut)
     out, qf = walk_decode_pallas(
         jnp.asarray(slabs), sym_lut, f_lut, F_lut,
         jnp.asarray(packed["k"]), jnp.asarray(packed["y"]),
@@ -137,29 +178,57 @@ def decode(batch: WalkBatch, stream: np.ndarray, model: StaticModel,
         jnp.asarray(packed["keep_hi"]),
         n_bits=model.params.n_bits, ways=batch.ways, n_steps=batch.n_steps,
         rows_per_block=rows_per_block, interpret=interpret)
-    return scatter_outputs(np.asarray(out), per_split, batch.ways, pack,
-                           n_symbols)
+    flat = scatter_outputs(out, jnp.asarray(per_split["g_hi"]),
+                           jnp.asarray(per_split["out_base"]),
+                           ways=batch.ways, pack=pack, n_symbols=n_symbols)
+    if check:
+        assert bool(jnp.all(flat >= 0)), \
+            "kernel outputs did not cover all symbols"
+    return flat
 
 
-def scatter_outputs(out_tiles: np.ndarray, per_split: dict, ways: int,
-                    pack: int, n_symbols: int) -> np.ndarray:
-    """(rows, T, 128) kernel tiles -> flat decoded symbols."""
+@functools.partial(jax.jit, static_argnames=("ways", "pack", "n_symbols"))
+def scatter_outputs(out_tiles: jax.Array, g_hi: jax.Array, out_base: jax.Array,
+                    *, ways: int, pack: int, n_symbols: int) -> jax.Array:
+    """(rows, T, 128) kernel tiles -> flat decoded symbols, on device.
+
+    The closed-form position reconstruction of ``_walk_batch_jit``: kept
+    positions are unique by construction, non-kept lanes scatter out of
+    bounds and are removed by ``mode="drop"`` — the (rows, T, 128) tile is
+    never materialized on host.
+    """
     rows, T, L = out_tiles.shape
     S_pad = rows * pack
     # (rows, T, pack, W) -> (S_pad, T, W)
     tiles = out_tiles.reshape(rows, T, pack, ways).transpose(0, 2, 1, 3)
     tiles = tiles.reshape(S_pad, T, ways)
-    g_hi = per_split["g_hi"].astype(np.int64)
-    base = per_split["out_base"].astype(np.int64)
-    t = np.arange(T, dtype=np.int64)
-    lane = np.arange(ways, dtype=np.int64)
-    i = ((g_hi[:, None, None] - t[None, :, None]) * ways + lane[None, None, :]
-         + base[:, None, None])
-    keep = tiles >= 0
-    outv = np.full(n_symbols, -1, dtype=np.int64)
-    outv[i[keep]] = tiles[keep]
-    assert (outv >= 0).all(), "kernel outputs did not cover all symbols"
-    return outv
+    t = jnp.arange(T, dtype=jnp.int32)
+    lane = jnp.arange(ways, dtype=jnp.int32)
+    i = ((g_hi[:, None, None].astype(jnp.int32) - t[None, :, None]) * ways
+         + lane[None, None, :] + out_base[:, None, None].astype(jnp.int32))
+    i = jnp.where(tiles >= 0, i, n_symbols)
+    outv = jnp.full((n_symbols,), -1, dtype=jnp.int32)
+    return outv.at[i.reshape(-1)].set(tiles.reshape(-1), mode="drop",
+                                      unique_indices=True)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_bits", "ways", "n_steps", "rows_per_block", "interpret", "pack",
+    "n_symbols"))
+def decode_tiles_fused(slabs, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi,
+                       start, stop, keep_lo, keep_hi, g_hi_split,
+                       out_base_split, *, n_bits: int, ways: int,
+                       n_steps: int, rows_per_block: int, interpret: bool,
+                       pack: int, n_symbols: int) -> jax.Array:
+    """Pallas walk + on-device scatter as ONE executable — the unit the
+    decode engine AOT-compiles and caches per shape bucket (DESIGN.md §4):
+    the (rows, T, 128) tile lives only between the two fused stages."""
+    out, _qf = walk_decode_pallas(
+        slabs, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi, start, stop,
+        keep_lo, keep_hi, n_bits=n_bits, ways=ways, n_steps=n_steps,
+        rows_per_block=rows_per_block, interpret=interpret)
+    return scatter_outputs(out, g_hi_split, out_base_split, ways=ways,
+                           pack=pack, n_symbols=n_symbols)
 
 
 def decode_recoil_kernel(plan, stream, final_states, model: StaticModel,

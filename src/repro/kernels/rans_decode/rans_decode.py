@@ -73,10 +73,21 @@ def _segment_read_offsets(reads: jax.Array, ways: int):
     return suffix_excl, seg_total
 
 
-def _walk_kernel(stream_ref, sym_ref, f_ref, F_ref, k_ref, y_ref, x0_ref,
-                 q0_ref, ghi_ref, start_ref, stop_ref, klo_ref, khi_ref,
-                 out_ref, qf_ref, *, n_bits: int, ways: int, n_steps: int):
-    """One grid step: walk ``n_steps`` symbol groups for a (ROWS, 128) tile."""
+def _walk_kernel(stream_ref, *refs, n_bits: int, ways: int, n_steps: int,
+                 packed: bool):
+    """One grid step: walk ``n_steps`` symbol groups for a (ROWS, 128) tile.
+
+    ``packed`` selects the §4.4 single-table LUT: ``sym_ref`` then holds the
+    packed int32 slot words (symbol | f << 8 | F << 20) and the per-step
+    table access is ONE VMEM gather instead of three.
+    """
+    if packed:
+        (sym_ref, k_ref, y_ref, x0_ref, q0_ref, ghi_ref, start_ref,
+         stop_ref, klo_ref, khi_ref, out_ref, qf_ref) = refs
+        f_ref = F_ref = None
+    else:
+        (sym_ref, f_ref, F_ref, k_ref, y_ref, x0_ref, q0_ref, ghi_ref,
+         start_ref, stop_ref, klo_ref, khi_ref, out_ref, qf_ref) = refs
     L_bound = jnp.uint32(1 << 16)
     b_bits = jnp.uint32(16)
     slot_mask = jnp.uint32((1 << n_bits) - 1)
@@ -100,9 +111,15 @@ def _walk_kernel(stream_ref, sym_ref, f_ref, F_ref, k_ref, y_ref, x0_ref,
         recon = active & (i == k)
         dec = active & (i < k)
         slot = (x & slot_mask).astype(jnp.int32)
-        s = jnp.take(sym_ref[...], slot)
-        fs = jnp.take(f_ref[...], slot).astype(jnp.uint32)
-        Fs = jnp.take(F_ref[...], slot).astype(jnp.uint32)
+        if packed:
+            pw = jnp.take(sym_ref[...], slot).astype(jnp.uint32)
+            s = (pw & jnp.uint32(0xFF)).astype(jnp.int32)
+            fs = (pw >> jnp.uint32(8)) & jnp.uint32(0xFFF)
+            Fs = (pw >> jnp.uint32(20)) & jnp.uint32(0xFFF)
+        else:
+            s = jnp.take(sym_ref[...], slot)
+            fs = jnp.take(f_ref[...], slot).astype(jnp.uint32)
+            Fs = jnp.take(F_ref[...], slot).astype(jnp.uint32)
         x_dec = fs * (x >> jnp.uint32(n_bits)) + (slot.astype(jnp.uint32) - Fs)
         under = x_dec < L_bound
         reads = recon | (dec & under)
@@ -127,8 +144,9 @@ def _walk_kernel(stream_ref, sym_ref, f_ref, F_ref, k_ref, y_ref, x0_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("n_bits", "ways", "n_steps", "rows_per_block", "interpret"))
-def walk_decode_pallas(slabs: jax.Array, sym_lut: jax.Array, f_lut: jax.Array,
-                       F_lut: jax.Array, k: jax.Array, y: jax.Array,
+def walk_decode_pallas(slabs: jax.Array, sym_lut: jax.Array,
+                       f_lut: jax.Array | None, F_lut: jax.Array | None,
+                       k: jax.Array, y: jax.Array,
                        x0: jax.Array, q0: jax.Array, g_hi: jax.Array,
                        start: jax.Array, stop: jax.Array, keep_lo: jax.Array,
                        keep_hi: jax.Array, *, n_bits: int, ways: int,
@@ -138,8 +156,13 @@ def walk_decode_pallas(slabs: jax.Array, sym_lut: jax.Array, f_lut: jax.Array,
     (n_rows, 128) by :mod:`.ops`; ``slabs`` is (n_blocks, slab_words) — the
     per-block stream slab with ``q0`` already slab-relative.
 
+    ``f_lut=F_lut=None`` selects the packed-LUT kernel: ``sym_lut`` must then
+    be the :func:`repro.core.rans.pack_decode_lut` int32 table.
+
     Returns (out, qf): out is int32 (n_rows, n_steps, 128), -1 where not kept.
     """
+    packed = f_lut is None
+    assert (F_lut is None) == packed, "pass both f_lut and F_lut or neither"
     n_rows, L = k.shape
     assert L == LANES and n_rows % rows_per_block == 0
     n_blocks = n_rows // rows_per_block
@@ -151,13 +174,14 @@ def walk_decode_pallas(slabs: jax.Array, sym_lut: jax.Array, f_lut: jax.Array,
     row_spec = pl.BlockSpec((R, L), lambda b: (b, 0))
     full = lambda arr: pl.BlockSpec(arr.shape, lambda b: (0,) * arr.ndim)
     kernel = functools.partial(_walk_kernel, n_bits=n_bits, ways=ways,
-                               n_steps=n_steps)
+                               n_steps=n_steps, packed=packed)
+    lut_args = (sym_lut,) if packed else (sym_lut, f_lut, F_lut)
     out, qf = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, slab_words), lambda b: (b, 0)),  # stream slab
-            full(sym_lut), full(f_lut), full(F_lut),
+            *[full(a) for a in lut_args],
             row_spec, row_spec, row_spec, row_spec, row_spec, row_spec,
             row_spec, row_spec, row_spec,
         ],
@@ -170,6 +194,6 @@ def walk_decode_pallas(slabs: jax.Array, sym_lut: jax.Array, f_lut: jax.Array,
             jax.ShapeDtypeStruct((n_rows, L), jnp.int32),
         ],
         interpret=interpret,
-    )(slabs, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi,
+    )(slabs, *lut_args, k, y, x0, q0, g_hi,
       start, stop, keep_lo, keep_hi)
     return out, qf

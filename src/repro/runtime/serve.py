@@ -1,8 +1,15 @@
-"""Serving runtime: batched prefill + decode with KV/SSM caches.
+"""Serving runtime: batched prefill + decode with KV/SSM caches, plus the
+content-delivery decode service.
 
 ``ServeEngine`` is the host-side loop the content-delivery and dry-run paths
 share: jit-compiled prefill and decode_step (shapes static per bucket),
 greedy or temperature sampling, straggler-safe timing hooks.
+
+``DecodeService`` is the rANS side of serving: encoded payloads registered
+once (stream device-resident), split metadata thinned per request to the
+client's parallelism, and every decode dispatched through a persistent
+:class:`repro.core.engine.DecoderSession` so steady-state traffic never
+recompiles (DESIGN.md §4).
 """
 
 from __future__ import annotations
@@ -15,6 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import DecoderSession, DeviceStream
+from repro.core.rans import StaticModel
+from repro.core.recoil import RecoilPlan, combine_plan
 from repro.models.model import LM
 
 
@@ -66,3 +76,42 @@ class ServeEngine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(
             rng, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class _Content:
+    stream: DeviceStream
+    plan: RecoilPlan
+    final_states: np.ndarray
+
+
+class DecodeService:
+    """Serve Recoil-encoded content to clients of any parallel capacity.
+
+    One :class:`DecoderSession` per service (one model, one executable
+    cache).  ``register`` uploads a payload's bitstream to the device once;
+    ``decode`` thins the split metadata to the request's thread count (a
+    pure metadata deletion, paper §3.3) and runs the cached bucketed
+    executable — zero recompiles for request sizes within a bucket.
+    """
+
+    def __init__(self, model: StaticModel, *, impl: str = "jnp", **session_kw):
+        self.session = DecoderSession(model, impl=impl, **session_kw)
+        self._contents: dict[str, _Content] = {}
+
+    def register(self, name: str, plan: RecoilPlan, stream: np.ndarray,
+                 final_states: np.ndarray) -> None:
+        self._contents[name] = _Content(
+            stream=self.session.upload_stream(stream), plan=plan,
+            final_states=np.asarray(final_states, np.uint32))
+
+    def decode(self, name: str, n_threads: int) -> jax.Array:
+        """Decode registered content at the client's parallelism; returns a
+        device int32 symbol array (no host round-trip)."""
+        c = self._contents[name]
+        plan = combine_plan(c.plan, n_threads)
+        return self.session.decode(plan, c.stream, c.final_states)
+
+    @property
+    def stats(self):
+        return self.session.stats

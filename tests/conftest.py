@@ -5,7 +5,12 @@ import sys
 # flag in a separate process).  Keep hypothesis deadlines off: CI boxes jit.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings
-
-settings.register_profile("repro", deadline=None, max_examples=25)
-settings.load_profile("repro")
+# hypothesis is a dev-only dependency (requirements-dev.txt); on a clean env
+# the property-based suites are skipped instead of killing collection.
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    collect_ignore = ["test_rans_properties.py", "test_recoil_semantics.py"]
+else:
+    settings.register_profile("repro", deadline=None, max_examples=25)
+    settings.load_profile("repro")

@@ -1,0 +1,118 @@
+"""DecoderSession: bucketed executable cache, device residency, dtype guards.
+
+The compile-count regression tests rely on the session's own counter, which
+increments exactly when an AOT executable is built (``jit(...).lower(...)
+.compile()`` on a bucket miss) — a bucket hit physically cannot re-trace.
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core import conventional, recoil
+from repro.core.engine import DecoderSession, pow2_bucket
+from repro.core.rans import RansParams, StaticModel
+from repro.core.recoil import build_split_states
+from repro.core.vectorized import WalkBatch, encode_interleaved_fast
+from repro.runtime.serve import DecodeService
+
+
+def _model_and_syms(n=64_000, seed=0, ways=32, n_bits=11):
+    rng = np.random.default_rng(seed)
+    syms = np.minimum(rng.exponential(40.0, size=n).astype(np.int64), 255)
+    params = RansParams(n_bits=n_bits, ways=ways)
+    return StaticModel.from_symbols(syms, 256, params), syms
+
+
+def test_pow2_bucket():
+    assert pow2_bucket(0) == 1
+    assert pow2_bucket(1) == 1
+    assert pow2_bucket(5) == 8
+    assert pow2_bucket(64) == 64
+    assert pow2_bucket(65) == 128
+    assert pow2_bucket(3, floor=1024) == 1024
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_session_decodes_correctly(impl):
+    model, syms = _model_and_syms(n=30_000)
+    enc = encode_interleaved_fast(syms[:30_000], model)
+    plan = recoil.plan_splits(enc, 16)
+    sess = DecoderSession(model, impl=impl)
+    out = sess.decode(plan, enc.stream, enc.final_states)
+    assert_allclose(np.asarray(out), syms[:30_000], rtol=0, atol=0)
+    assert sess.stats.compiles == 1
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_session_one_compile_per_bucket(impl):
+    """Regression: >= 4 distinct input sizes within one shape bucket must
+    build exactly ONE executable (the engine's reason to exist)."""
+    model, syms = _model_and_syms()
+    sess = DecoderSession(model, impl=impl)
+    for n in (50_000, 55_000, 60_000, 64_000):
+        enc = encode_interleaved_fast(syms[:n], model)
+        plan = recoil.plan_splits(enc, 24)
+        out = sess.decode(plan, enc.stream, enc.final_states)
+        assert_allclose(np.asarray(out), syms[:n], rtol=0, atol=0)
+    assert sess.stats.decodes == 4
+    assert sess.stats.compiles == 1
+    assert sess.stats.cache_hits == 3
+
+
+def test_session_packed_matches_unpacked():
+    model, syms = _model_and_syms(n=25_000)
+    enc = encode_interleaved_fast(syms[:25_000], model)
+    plan = recoil.plan_splits(enc, 8)
+    a = DecoderSession(model, packed_lut=True).decode(
+        plan, enc.stream, enc.final_states)
+    b = DecoderSession(model, packed_lut=False).decode(
+        plan, enc.stream, enc.final_states)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+
+
+def test_session_device_stream_reuse():
+    model, syms = _model_and_syms(n=20_000)
+    enc = encode_interleaved_fast(syms[:20_000], model)
+    plan = recoil.plan_splits(enc, 8)
+    sess = DecoderSession(model)
+    ds = sess.upload_stream(enc.stream)
+    assert ds.bucket == pow2_bucket(enc.n_words, 1024)
+    for _ in range(2):
+        out = sess.decode(plan, ds, enc.final_states)
+        assert_allclose(np.asarray(out), syms[:20_000], rtol=0, atol=0)
+    assert sess.stats.compiles == 1
+    assert sess.stats.cache_hits == 1
+
+
+def test_session_conventional_adapter():
+    model, syms = _model_and_syms(n=30_000)
+    conv = conventional.encode_conventional(syms[:30_000], model, 7)
+    sess = DecoderSession(model)
+    out = sess.decode_conventional(conv)
+    assert_allclose(np.asarray(out), syms[:30_000], rtol=0, atol=0)
+
+
+def test_decode_service_thins_and_serves():
+    model, syms = _model_and_syms(n=40_000)
+    enc = encode_interleaved_fast(syms[:40_000], model)
+    plan = recoil.plan_splits(enc, 64)
+    svc = DecodeService(model)
+    svc.register("content", plan, enc.stream, enc.final_states)
+    for threads in (4, 4, 64):
+        out = svc.decode("content", threads)
+        assert_allclose(np.asarray(out), syms[:40_000], rtol=0, atol=0)
+    # the repeated 4-thread request reused its bucket executable
+    assert svc.stats.compiles == 2
+    assert svc.stats.cache_hits == 1
+
+
+def test_out_base_is_int32_and_guarded():
+    model, syms = _model_and_syms(n=2_000)
+    conv = conventional.encode_conventional(syms[:2_000], model, 3)
+    splits, _words, out_bases = conventional.to_split_states(conv)
+    batch = WalkBatch.from_splits(splits, 32, out_bases)
+    assert batch.out_base.dtype == np.int32
+    with pytest.raises(ValueError, match="int32"):
+        WalkBatch.from_splits(splits, 32, np.full(len(splits), 2 ** 31 - 5,
+                                                  dtype=np.int64))

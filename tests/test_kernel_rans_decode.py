@@ -104,3 +104,33 @@ def test_jnp_impl_matches_pallas():
     a = decode(batch, enc.stream, model, plan.n_symbols, impl="jnp")
     b = decode(batch, enc.stream, model, plan.n_symbols, impl="pallas")
     assert_allclose(a, b, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("ways", [32, 128])
+@pytest.mark.parametrize("n_bits", [11, 12])
+def test_packed_lut_agrees_with_oracle(n_bits, ways):
+    """§4.4 packed-LUT tripartite equality: python oracle == packed jnp walk
+    == packed Pallas kernel (interpret), bit-exact."""
+    syms, model, enc = _make(n=20_000, ways=ways, n_bits=n_bits)
+    plan = recoil.plan_splits(enc, 12)
+    oracle = recoil.decode_recoil(plan, enc.stream, enc.final_states, model)
+    assert_allclose(oracle, syms, rtol=0, atol=0)
+    splits = build_split_states(plan, enc.final_states)
+    batch = WalkBatch.from_splits(splits, plan.ways)
+    from repro.core.vectorized import walk_decode_batch
+    jnp_out = walk_decode_batch(batch, enc.stream, model, plan.n_symbols,
+                                packed_lut=True)
+    pallas_out = decode(batch, enc.stream, model, plan.n_symbols,
+                        impl="pallas", packed_lut=True)
+    assert_allclose(jnp_out, oracle, rtol=0, atol=0)
+    assert_allclose(np.asarray(pallas_out), oracle, rtol=0, atol=0)
+
+
+def test_packed_lut_rejected_when_it_cannot_fit():
+    syms, model, enc = _make(n=5_000, n_bits=14)
+    plan = recoil.plan_splits(enc, 4)
+    splits = build_split_states(plan, enc.final_states)
+    batch = WalkBatch.from_splits(splits, plan.ways)
+    with pytest.raises(ValueError, match="packed LUT"):
+        decode(batch, enc.stream, model, plan.n_symbols, impl="pallas",
+               packed_lut=True)
