@@ -16,8 +16,24 @@ this container, which times Python, not hardware — EXPERIMENTS.md §Perf):
            warm-up pass — plus the recompile count across the measured
            sweep, which must be 0 (all sizes share one bucket).
 
-Writes ``benchmarks/results/engine.json`` (the CI artifact) and returns CSV
-rows for the run.py driver.
+Two serving-tier rows ride along (this PR's plan/executor split):
+
+  * microbatch: 8 concurrent small requests through ``DecodeService`` —
+    sequential dispatch (one executable call per request) vs coalesced
+    (``submit``/``flush``: ONE fused executable call, per-request slices
+    out).  Small requests are overhead-dominated, which is exactly the
+    traffic microbatching exists for; the coalesced row must show >= 1.5x
+    request throughput.
+  * sharded: the warm size sweep through the multi-device executor
+    (``impl="sharded"`` over a 1-D mesh of every visible device), with the
+    same 0-recompiles regression.  Skipped (and marked so in the JSON) on
+    single-device containers; CI runs it under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+
+Writes ``benchmarks/results/engine.json`` — ``engine_multidev.json`` when
+more than one device is visible, so the CI multi-device run doesn't
+clobber the single-device artifact — and returns CSV rows for the run.py
+driver.
 """
 
 from __future__ import annotations
@@ -35,6 +51,7 @@ from repro.core.rans import RansParams, StaticModel
 from repro.core.recoil import build_split_states
 from repro.core.vectorized import (WalkBatch, encode_interleaved_fast,
                                    walk_decode_batch)
+from repro.runtime.serve import DecodeService
 
 from . import datasets
 
@@ -44,6 +61,12 @@ from . import datasets
 QUICK_SIZES = (1_600_000, 1_750_000, 1_900_000, 2_000_000)   # 2 MB dataset
 FULL_SIZES = (6_500_000, 7_200_000, 7_800_000, 8_300_000)    # 10 MB dataset
 N_SPLITS = 64
+
+# Microbatch tier: 8 concurrent small requests (the overhead-dominated
+# regime; ~2 KB payloads at 16-way client parallelism).
+MICRO_REQS = 8
+MICRO_SIZE = 2_000
+MICRO_SPLITS = 16
 
 
 def run(quick: bool = False, repeats: int = 3) -> list:
@@ -58,7 +81,8 @@ def run(quick: bool = False, repeats: int = 3) -> list:
         plan = recoil.plan_splits(enc, N_SPLITS)
         batch = WalkBatch.from_splits(
             build_split_states(plan, enc.final_states), plan.ways)
-        reqs.append({"n": n, "enc": enc, "plan": plan, "batch": batch})
+        reqs.append({"n": n, "enc": enc, "plan": plan, "batch": batch,
+                     "syms": syms[:n]})
     sweep_mb = sum(n for n in sizes) / 1e6
 
     # ---- correctness, untimed: both paths verified once up front (the
@@ -104,14 +128,116 @@ def run(quick: bool = False, repeats: int = 3) -> list:
         "engine_executables": len(sess._exec),
         "engine_stats": sess.stats.snapshot(),
     }
-    os.makedirs("benchmarks/results", exist_ok=True)
-    with open("benchmarks/results/engine.json", "w") as f:
-        json.dump(summary, f, indent=2)
-
     rows = [{"bench": "engine", "path": "cold_per_call", "sizes": len(sizes),
              "mb_per_s": summary["cold_mb_per_s"],
              "recompiles": len(sizes)},
             {"bench": "engine", "path": "session_warm", "sizes": len(sizes),
              "mb_per_s": summary["warm_mb_per_s"],
              "recompiles": recompiles}]
+
+    summary["microbatch"] = _bench_microbatch(model, repeats)
+    rows += [
+        {"bench": "engine", "path": "microbatch_sequential",
+         "sizes": MICRO_REQS,
+         "req_per_s": summary["microbatch"]["sequential_req_per_s"],
+         "recompiles": 0},
+        {"bench": "engine", "path": "microbatch_coalesced",
+         "sizes": MICRO_REQS,
+         "req_per_s": summary["microbatch"]["coalesced_req_per_s"],
+         "recompiles": summary["microbatch"]["recompiles_warm"]},
+    ]
+
+    summary["sharded"] = _bench_sharded(model, reqs, sweep_mb, repeats)
+    if not summary["sharded"].get("skipped"):
+        rows.append({"bench": "engine", "path": "sharded_warm",
+                     "sizes": len(sizes),
+                     "mb_per_s": summary["sharded"]["warm_mb_per_s"],
+                     "recompiles": summary["sharded"]["recompiles_warm_sweep"]})
+
+    os.makedirs("benchmarks/results", exist_ok=True)
+    name = "engine.json" if len(jax.devices()) == 1 else "engine_multidev.json"
+    with open(f"benchmarks/results/{name}", "w") as f:
+        json.dump(summary, f, indent=2)
     return rows
+
+
+def _bench_microbatch(model: StaticModel, repeats: int) -> dict:
+    """8 concurrent small requests: sequential dispatch vs one fused call.
+
+    Both paths are plan-warm and executable-warm before timing (the service
+    memoizes thinned plans per (name, threads) and fused plans per request
+    group), so the comparison is pure dispatch: 8 executable calls vs 1.
+    """
+    rng = np.random.default_rng(11)
+    payloads = {
+        f"r{i}": np.minimum(
+            rng.exponential(50.0, size=MICRO_SIZE).astype(np.int64), 255)
+        for i in range(MICRO_REQS)}
+    svc = DecodeService(model, impl="jnp", microbatch=MICRO_REQS)
+    for name, syms in payloads.items():
+        enc = encode_interleaved_fast(syms, model)
+        svc.register(name, recoil.plan_splits(enc, MICRO_SPLITS),
+                     enc.stream, enc.final_states)
+    names = list(payloads)
+
+    # warm + verify both paths once, untimed
+    for name in names:
+        assert (np.asarray(svc.decode(name, MICRO_SPLITS))
+                == payloads[name]).all()
+    tickets = [svc.submit(n, MICRO_SPLITS) for n in names]
+    svc.flush()
+    for name, t in zip(names, tickets):
+        assert (np.asarray(t.result()) == payloads[name]).all()
+
+    compiles_before = svc.stats.compiles
+    seq_ts, coal_ts = [], []
+    for _ in range(max(repeats, 5)):
+        t0 = time.perf_counter()
+        for name in names:
+            jax.block_until_ready(svc.decode(name, MICRO_SPLITS))
+        seq_ts.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        tickets = [svc.submit(n, MICRO_SPLITS) for n in names]
+        svc.flush()
+        for t in tickets:
+            jax.block_until_ready(t.result())
+        coal_ts.append(time.perf_counter() - t0)
+    seq_s, coal_s = float(np.median(seq_ts)), float(np.median(coal_ts))
+    return {
+        "n_requests": MICRO_REQS,
+        "request_symbols": MICRO_SIZE,
+        "request_splits": MICRO_SPLITS,
+        "sequential_req_per_s": round(MICRO_REQS / seq_s, 1),
+        "coalesced_req_per_s": round(MICRO_REQS / coal_s, 1),
+        "speedup": round(seq_s / coal_s, 2),
+        "recompiles_warm": svc.stats.compiles - compiles_before,
+        "service_stats": svc.stats.snapshot(),
+    }
+
+
+def _bench_sharded(model: StaticModel, reqs: list, sweep_mb: float,
+                   repeats: int) -> dict:
+    """Warm size sweep through the multi-device sharded executor."""
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return {"skipped": True, "n_devices": n_dev}
+    sess = DecoderSession(model, impl="sharded")
+    handles = [sess.upload_stream(r["enc"].stream) for r in reqs]
+    for r, ds in zip(reqs, handles):   # warm + verify, untimed
+        out = np.asarray(sess.decode(r["plan"], ds, r["enc"].final_states))
+        assert (out == r["syms"]).all()
+    compiles_before = sess.stats.compiles
+    warm_ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for r, ds in zip(reqs, handles):
+            jax.block_until_ready(
+                sess.decode(r["plan"], ds, r["enc"].final_states))
+        warm_ts.append(time.perf_counter() - t0)
+    warm_s = float(np.median(warm_ts))
+    return {
+        "n_devices": n_dev,
+        "warm_mb_per_s": round(sweep_mb / warm_s, 2),
+        "recompiles_warm_sweep": sess.stats.compiles - compiles_before,
+        "engine_stats": sess.stats.snapshot(),
+    }

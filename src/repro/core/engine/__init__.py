@@ -1,0 +1,34 @@
+"""Persistent decode engine: device-resident tables + bucketed executables.
+
+The one-shot entry points (``walk_decode_batch``, ``kernels.rans_decode
+.decode``) re-trace and re-compile for every distinct input size, because the
+walk's scan length, split count, stream length, and output size are all
+static under jit.  For a server decoding many requests of varying sizes that
+is a compile per request — the opposite of the paper's "decode as fast as
+the hardware allows" claim.
+
+The engine is a plan/executor architecture (DESIGN.md §4b):
+
+  * ``plan``      — the :class:`DecodePlan` IR (bucket selection, inert-row
+                    padding, arg assembly, cache keying) and the microbatch
+                    fusion primitive :func:`concat_walk_batches`;
+  * ``executors`` — pluggable backends (``jnp``, ``pallas``; ``sharded``
+                    lives in ``repro.parallel.decode_shard``) behind one
+                    plan/lower/run interface;
+  * ``session``   — :class:`DecoderSession`, a thin plans->executables
+                    cache with exact compile accounting.
+
+Public API is re-exported here; ``from repro.core.engine import
+DecoderSession`` keeps working exactly as before the split.
+"""
+
+from .plan import (DecodePlan, DeviceStream, concat_walk_batches,
+                   pad_split_arrays, pow2_bucket, work_bucket)
+from .executors import Executor, JnpExecutor, PallasExecutor, make_executor
+from .session import DecoderSession, EngineStats
+
+__all__ = [
+    "DecodePlan", "DeviceStream", "DecoderSession", "EngineStats",
+    "Executor", "JnpExecutor", "PallasExecutor", "concat_walk_batches",
+    "make_executor", "pad_split_arrays", "pow2_bucket", "work_bucket",
+]

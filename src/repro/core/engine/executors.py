@@ -1,0 +1,208 @@
+"""Pluggable decode executors behind one interface.
+
+An :class:`Executor` owns one backend's request preparation and lowering:
+
+    upload_stream(words)     -> DeviceStream   (backend decides residency)
+    plan(batch, ds, n)       -> DecodePlan     (host prep; pure, cacheable)
+    lower(plan)              -> executable     (AOT jit(...).lower().compile())
+    run(exe, plan)           -> device syms    (bucketed; caller slices)
+
+:class:`~repro.core.engine.session.DecoderSession` composes an executor with
+the executable cache and stats; it never branches on the backend.  Backends:
+
+  * ``jnp``     — XLA walk over the full device-resident stream (fast CPU
+                  path; also the oracle for the others);
+  * ``pallas``  — the TPU kernel (per-block stream slabs, fused scatter);
+  * ``sharded`` — multi-device shard_map over the split rows, one bucketed
+                  executable per (mesh, bucket); lives in
+                  ``repro.parallel.decode_shard`` (imported lazily so the
+                  core engine never touches mesh state).
+"""
+
+from __future__ import annotations
+
+import weakref
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..rans import StaticModel
+from ..vectorized import WalkBatch, _walk_batch_jit
+from .plan import (DecodePlan, DeviceStream, SPLIT_FIELDS, pad_split_arrays,
+                   pow2_bucket, work_bucket)
+
+
+class Executor:
+    """Backend contract (see module docstring).  ``luts`` is the session's
+    device-resident slot-table tuple ``(sym_lut, f_lut, F_lut)`` — the last
+    two are None under the §4.4 packed layout."""
+
+    impl: str = "?"
+
+    def __init__(self, model: StaticModel, packed_lut: bool, luts: tuple):
+        self.model = model
+        self.packed_lut = packed_lut
+        self.luts = luts
+
+    def upload_stream(self, stream: np.ndarray) -> DeviceStream:
+        """Default: host-side registration only (backends that never read
+        the whole stream on device, e.g. Pallas per-block slabs)."""
+        host = np.ascontiguousarray(np.asarray(stream))
+        return DeviceStream(words=None, host=host, n_words=len(host),
+                            bucket=pow2_bucket(len(host), 1024))
+
+    def plan(self, batch: WalkBatch, ds: DeviceStream,
+             n_symbols: int) -> DecodePlan:
+        raise NotImplementedError
+
+    def lower(self, plan: DecodePlan):
+        raise NotImplementedError
+
+    def run(self, exe, plan: DecodePlan) -> jax.Array:
+        raise NotImplementedError
+
+
+class JnpExecutor(Executor):
+    """XLA walk over the full device-resident stream."""
+
+    impl = "jnp"
+
+    def __init__(self, model: StaticModel, packed_lut: bool, luts: tuple):
+        super().__init__(model, packed_lut, luts)
+        # Cross-impl handle fix: a DeviceStream registered by a backend that
+        # skips the full-stream upload (words=None) used to be re-uploaded
+        # on EVERY decode.  The upgrade is cached here keyed by handle id,
+        # with a weakref identity check (not a strong ref — a strong ref
+        # would pin every one-off handle's device buffer for the session's
+        # lifetime) so a recycled id can never serve a stale upload.
+        self._stream_cache: dict[int, tuple[weakref.ref, DeviceStream]] = {}
+        self.stream_uploads = 0
+
+    def _put(self, padded: np.ndarray) -> jax.Array:
+        return jnp.asarray(padded)
+
+    def upload_stream(self, stream: np.ndarray) -> DeviceStream:
+        host = np.ascontiguousarray(np.asarray(stream))
+        bucket = pow2_bucket(len(host), 1024)
+        padded = np.zeros(bucket, np.uint32)
+        padded[:len(host)] = host.astype(np.uint32)
+        self.stream_uploads += 1
+        return DeviceStream(words=self._put(padded), host=host,
+                            n_words=len(host), bucket=bucket)
+
+    def resident(self, ds: DeviceStream) -> DeviceStream:
+        """Ensure the handle has device words, uploading at most once per
+        live handle."""
+        if ds.words is not None:
+            return ds
+        hit = self._stream_cache.get(id(ds))
+        if hit is not None and hit[0]() is ds:
+            return hit[1]
+        up = self.upload_stream(ds.host)
+        if len(self._stream_cache) > 512:   # prune dead handles
+            for key in [k for k, (ref, _) in self._stream_cache.items()
+                        if ref() is None]:
+                del self._stream_cache[key]
+        self._stream_cache[id(ds)] = (weakref.ref(ds), up)
+        return up
+
+    def _split_bucket(self, S: int) -> int:
+        return work_bucket(S)
+
+    def plan(self, batch: WalkBatch, ds: DeviceStream,
+             n_symbols: int) -> DecodePlan:
+        ds = self.resident(ds)
+        p = self.model.params
+        W = batch.ways
+        s_b = self._split_bucket(batch.k.shape[0])
+        steps_b = work_bucket(batch.n_steps)
+        out_b = pow2_bucket(n_symbols)
+        arrs = pad_split_arrays(batch, s_b)
+        key = (self.impl, self.packed_lut, p.n_bits, W, s_b, steps_b,
+               ds.bucket, out_b)
+        args = (ds.words, *self.luts,
+                *(arrs[f] for f in SPLIT_FIELDS))
+        statics = dict(n_bits=p.n_bits, ways=W, n_steps=steps_b,
+                       n_symbols=out_b)
+        return DecodePlan(key=key, args=args, statics=statics,
+                          n_symbols=n_symbols, out_bucket=out_b)
+
+    def lower(self, plan: DecodePlan):
+        return _walk_batch_jit.lower(
+            *plan.args, **plan.statics, ctx_of_index=None).compile()
+
+    def run(self, exe, plan: DecodePlan) -> jax.Array:
+        out, _qf = exe(*plan.args, ctx_of_index=None)
+        return out
+
+
+class PallasExecutor(Executor):
+    """TPU kernel: lane-packed tiles, per-block stream slabs, fused scatter
+    (``interpret=True`` on CPU containers)."""
+
+    impl = "pallas"
+
+    def __init__(self, model: StaticModel, packed_lut: bool, luts: tuple, *,
+                 interpret: bool = True, rows_per_block: int = 8):
+        super().__init__(model, packed_lut, luts)
+        self.interpret = interpret
+        self.rows_per_block = rows_per_block
+
+    def plan(self, batch: WalkBatch, ds: DeviceStream,
+             n_symbols: int) -> DecodePlan:
+        from repro.kernels.rans_decode.ops import (build_slabs, pack_batch,
+                                                   pad_to_rows)
+        if ds.host is None:
+            raise ValueError("pallas executor needs host stream words "
+                             "(device-only fused streams are jnp/sharded)")
+        p = self.model.params
+        W = batch.ways
+        rpb = self.rows_per_block
+        packed, per_split, rows, pack, _ = pack_batch(batch)
+        rows = pad_to_rows(packed, per_split, rows, pack,
+                           work_bucket(-(-rows // rpb)) * rpb)
+        slabs, slab_lo = build_slabs(ds.host, per_split, rows, pack, rpb)
+        slab_b = pow2_bucket(slabs.shape[1], 8)
+        if slab_b > slabs.shape[1]:
+            slabs = np.pad(slabs, ((0, 0), (0, slab_b - slabs.shape[1])))
+        steps_b = work_bucket(batch.n_steps)
+        out_b = pow2_bucket(n_symbols)
+        lo_rows = np.repeat(slab_lo, rpb).astype(np.int32)
+        q0_rel = packed["q0"] - lo_rows[:, None]
+        key = (self.impl, self.packed_lut, p.n_bits, W, rows, steps_b,
+               slab_b, out_b, rpb, self.interpret)
+        args = (jnp.asarray(slabs), *self.luts,
+                jnp.asarray(packed["k"]), jnp.asarray(packed["y"]),
+                jnp.asarray(packed["x0"]), jnp.asarray(q0_rel),
+                jnp.asarray(packed["g_hi"]), jnp.asarray(packed["start"]),
+                jnp.asarray(packed["stop"]), jnp.asarray(packed["keep_lo"]),
+                jnp.asarray(packed["keep_hi"]),
+                jnp.asarray(per_split["g_hi"]),
+                jnp.asarray(per_split["out_base"]))
+        statics = dict(n_bits=p.n_bits, ways=W, n_steps=steps_b,
+                       rows_per_block=rpb, interpret=self.interpret,
+                       pack=pack, n_symbols=out_b)
+        return DecodePlan(key=key, args=args, statics=statics,
+                          n_symbols=n_symbols, out_bucket=out_b)
+
+    def lower(self, plan: DecodePlan):
+        from repro.kernels.rans_decode.ops import decode_tiles_fused
+        return decode_tiles_fused.lower(*plan.args, **plan.statics).compile()
+
+    def run(self, exe, plan: DecodePlan) -> jax.Array:
+        return exe(*plan.args)
+
+
+def make_executor(impl: str, model: StaticModel, packed_lut: bool,
+                  luts: tuple, *, interpret: bool = True,
+                  rows_per_block: int = 8, mesh=None) -> Executor:
+    if impl == "jnp":
+        return JnpExecutor(model, packed_lut, luts)
+    if impl == "pallas":
+        return PallasExecutor(model, packed_lut, luts, interpret=interpret,
+                              rows_per_block=rows_per_block)
+    if impl == "sharded":
+        from repro.parallel.decode_shard import ShardedExecutor
+        return ShardedExecutor(model, packed_lut, luts, mesh=mesh)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,170 @@
+"""DecodePlan IR: a decode request, prepared once into executor-ready form.
+
+The request-preparation pipeline used to live inline in the engine's two
+backend methods, duplicated and un-inspectable.  It is now an explicit IR:
+
+    WalkBatch + DeviceStream + n_symbols
+        --executor.plan()-->  DecodePlan          (host work, per request)
+        --session cache[plan.key]-->  executable  (compile only on miss)
+        --executor.run(exe, plan)-->  device syms (no host round-trip)
+
+A :class:`DecodePlan` captures everything the executable call needs:
+
+  * ``key``      — the executable-cache key.  Two plans with equal keys are
+                   guaranteed to be servable by one AOT executable (all
+                   bucketed dims equal, same backend/LUT/mesh config);
+  * ``args``     — the positional argument tuple, already padded to the
+                   bucketed shapes and converted to device arrays;
+  * ``statics``  — the static lowering kwargs (``n_steps``, ``n_symbols``
+                   etc. at their *bucketed* values);
+  * ``n_symbols``— the real output length; the bucket tail is sliced off
+                   after the call.
+
+Bucketing policy (DESIGN.md §4): memory-dominant dims pad to powers of two
+(:func:`pow2_bucket`), compute-dominant dims to powers of two and their
+1.5x midpoints (:func:`work_bucket`).  Padding is inert by construction —
+extra splits carry ``start = -1`` (never active), extra steps walk groups
+below every ``stop``, extra stream words are never indexed, extra output
+slots are sliced off.
+
+:func:`concat_walk_batches` is the microbatch fusion primitive: N requests'
+WalkBatches become one batch whose per-request rows write disjoint output
+windows (``out_base`` shifted by each request's symbol offset) and read
+disjoint stream windows (``q0`` shifted by each stream's word offset in a
+fused stream, when requests target different contents).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..vectorized import WalkBatch
+
+
+def pow2_bucket(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor) — memory-dominant dims."""
+    n = max(int(n), floor, 1)
+    return 1 << (n - 1).bit_length()
+
+
+def work_bucket(n: int, floor: int = 1) -> int:
+    """Smallest of {2^k, 1.5 * 2^k} >= max(n, floor) — compute-dominant dims
+    (scan steps, split rows), where pure powers of two could pad the walk by
+    up to 2x; the 1.5x midpoints cap the waste at ~1.5x for one extra
+    executable per octave (DESIGN.md §4)."""
+    n = max(int(n), floor, 1)
+    p = 1 << max(0, (n - 1).bit_length() - 1)
+    if n <= p:
+        return p
+    if n <= p + p // 2:
+        return p + p // 2
+    return 2 * p
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceStream:
+    """A stream registered with a session, padded to its pow2 bucket.
+
+    ``host`` keeps the original words for host-side re-layouts (the Pallas
+    slab build, which uploads per-block slabs instead); backends that read
+    the whole stream on device (jnp, sharded) fill ``words``.  ``host`` may
+    be None for fused device-side streams built by the microbatcher.
+    """
+
+    words: jax.Array | None   # uint32[bucket], zero-padded tail
+    host: np.ndarray | None   # uint16/uint32[n_words] — original words
+    n_words: int
+    bucket: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    """A prepared decode request (see module docstring).
+
+    ``key`` is hashable; ``args``/``statics`` are consumed positionally by
+    the executor that built the plan — plans are not portable across
+    executors (the key's leading impl tag enforces that in the cache).
+    """
+
+    key: tuple
+    args: tuple
+    statics: dict
+    n_symbols: int
+    out_bucket: int
+
+
+def pad_split_arrays(batch: WalkBatch, s_bucket: int) -> dict[str, jax.Array]:
+    """Pad the SoA split arrays to the split-count bucket with inert rows."""
+    S, W = batch.k.shape
+    pad = s_bucket - S
+
+    def grow(a: np.ndarray, fill) -> jax.Array:
+        if pad == 0:
+            return jnp.asarray(a)
+        ext = np.full((pad,) + a.shape[1:], fill, a.dtype)
+        return jnp.asarray(np.concatenate([a, ext]))
+
+    return {
+        "k": grow(batch.k, np.int32(2 ** 30)),
+        "y": grow(batch.y, np.uint32(0)),
+        "x0": grow(batch.x0, np.uint32(0)),
+        "q0": grow(batch.q0, np.int32(0)),
+        "g_hi": grow(batch.g_hi, np.int32(0)),
+        "start": grow(batch.start, np.int32(-1)),
+        "stop": grow(batch.stop, np.int32(0)),
+        "keep_lo": grow(batch.keep_lo, np.int32(0)),
+        "keep_hi": grow(batch.keep_hi, np.int32(0)),
+        "out_base": grow(batch.out_base.astype(np.int32), np.int32(0)),
+    }
+
+
+SPLIT_FIELDS = ("k", "y", "x0", "q0", "g_hi", "start", "stop",
+                "keep_lo", "keep_hi", "out_base")
+
+
+def concat_walk_batches(batches: Sequence[WalkBatch],
+                        sym_offsets: Sequence[int],
+                        word_offsets: Sequence[int] | None = None) -> WalkBatch:
+    """Fuse N WalkBatches into one (microbatch coalescing).
+
+    Request i's rows write output window ``[sym_offsets[i], ...)`` (its
+    ``out_base`` shifts by the offset) and, when ``word_offsets`` is given,
+    read stream window starting at ``word_offsets[i]`` of a fused stream
+    (its ``q0`` shifts).  Rows stay per-request-inert exactly as before;
+    the fused walk runs max(n_steps) scan steps for every row.
+    """
+    ways = {b.ways for b in batches}
+    if len(ways) != 1:
+        raise ValueError(f"cannot fuse batches with mixed ways {sorted(ways)}")
+    W = ways.pop()
+    if word_offsets is None:
+        word_offsets = [0] * len(batches)
+
+    def cat(field: str) -> np.ndarray:
+        return np.concatenate([getattr(b, field) for b in batches])
+
+    out_base = np.concatenate(
+        [b.out_base.astype(np.int64) + int(o)
+         for b, o in zip(batches, sym_offsets)])
+    keep_hi = cat("keep_hi")
+    tops = out_base + keep_hi
+    if len(tops) and int(tops.max()) >= 2 ** 31:
+        raise ValueError(
+            f"fused output index {int(tops.max())} exceeds int32; coalesce "
+            "fewer/smaller requests")
+    q0 = np.concatenate(
+        [b.q0.astype(np.int64) + int(o)
+         for b, o in zip(batches, word_offsets)])
+    if len(q0) and int(q0.max()) >= 2 ** 31:
+        raise ValueError("fused stream index exceeds int32")
+    return WalkBatch(
+        k=cat("k"), y=cat("y"), x0=cat("x0"), q0=q0.astype(np.int32),
+        g_hi=cat("g_hi"), start=cat("start"), stop=cat("stop"),
+        keep_lo=cat("keep_lo"), keep_hi=keep_hi,
+        out_base=out_base.astype(np.int32),
+        n_steps=max(b.n_steps for b in batches), ways=W)

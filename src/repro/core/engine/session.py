@@ -1,0 +1,126 @@
+"""DecoderSession: a thin plan -> executable cache over a pluggable executor.
+
+The session owns exactly three things (DESIGN.md §4, §4b):
+
+  * device-resident slot tables, uploaded once at construction;
+  * the executable cache — ``plan.key -> compiled`` — so a bucket hit
+    physically cannot re-trace, and ``stats.compiles`` counts builds exactly;
+  * request accounting (:class:`EngineStats`).
+
+All backend knowledge lives in the executor (``jnp`` / ``pallas`` /
+``sharded`` — see ``engine.executors``).  The prepare/execute split is
+public API: callers that re-issue the same request shape (e.g.
+``runtime.serve.DecodeService``) cache the :class:`DecodePlan` and skip the
+host-side preparation entirely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from ..rans import StaticModel
+from ..vectorized import WalkBatch
+from .executors import make_executor
+from .plan import DecodePlan, DeviceStream
+
+
+@dataclasses.dataclass
+class EngineStats:
+    compiles: int = 0      # executables built (bucket misses)
+    cache_hits: int = 0    # decodes served by an existing executable
+    decodes: int = 0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class DecoderSession:
+    """Device-resident Recoil decoder with a bucketed executable cache.
+
+    ``impl`` is ``"jnp"`` (XLA walk — the fast CPU path), ``"pallas"`` (the
+    TPU kernel; ``interpret=True`` on CPU containers), or ``"sharded"``
+    (multi-device shard_map over split rows; pass ``mesh=`` or the executor
+    builds a 1-D mesh over every visible device).  ``packed_lut`` defaults
+    to auto: the §4.4 packed table whenever the model fits it.
+    """
+
+    def __init__(self, model: StaticModel, *, impl: str = "jnp",
+                 packed_lut: bool | None = None, interpret: bool = True,
+                 rows_per_block: int = 8, mesh=None):
+        if impl not in ("jnp", "pallas", "sharded"):
+            raise ValueError(f"unknown impl {impl!r}")
+        from repro.kernels.rans_decode.ops import _luts, packed_lut_ok
+        self.model = model
+        self.impl = impl
+        if packed_lut is None:
+            packed_lut = packed_lut_ok(model)
+        elif packed_lut and not packed_lut_ok(model):
+            raise ValueError("packed LUT requires 8-bit symbols and n <= 12")
+        self.packed_lut = packed_lut
+        # Device-resident slot tables, uploaded once.
+        self._luts = _luts(model, packed_lut)
+        self.executor = make_executor(
+            impl, model, packed_lut, self._luts, interpret=interpret,
+            rows_per_block=rows_per_block, mesh=mesh)
+        self._exec: dict[tuple, object] = {}
+        self.stats = EngineStats()
+
+    # ------------------------------------------------------------------
+    # Streams
+    # ------------------------------------------------------------------
+
+    def upload_stream(self, stream: np.ndarray) -> DeviceStream:
+        """Register a bitstream once; reuse the handle across decodes.
+        Residency is the executor's call (jnp/sharded upload the padded
+        words; Pallas registers host-side and DMAs per-block slabs)."""
+        return self.executor.upload_stream(stream)
+
+    # ------------------------------------------------------------------
+    # Decode
+    # ------------------------------------------------------------------
+
+    def decode(self, plan, stream, final_states) -> jax.Array:
+        """RecoilPlan + stream (+ transmitted final states) -> device int32
+        symbol array.  ``stream`` may be a raw word array or a resident
+        :class:`DeviceStream` from :meth:`upload_stream`."""
+        from ..recoil import build_split_states
+        splits = build_split_states(plan, final_states)
+        batch = WalkBatch.from_splits(splits, plan.ways)
+        return self.decode_batch(batch, stream, plan.n_symbols)
+
+    def decode_conventional(self, conv) -> jax.Array:
+        """Conventional-partitioning adapter through the same engine."""
+        from ..conventional import to_split_states
+        splits, words, out_bases = to_split_states(conv)
+        batch = WalkBatch.from_splits(splits, self.model.params.ways,
+                                      out_bases)
+        return self.decode_batch(batch, words, conv.n_symbols)
+
+    def prepare(self, batch: WalkBatch, stream, n_symbols: int) -> DecodePlan:
+        """Host-side request preparation only (no dispatch): bucket, pad,
+        assemble args.  The returned plan may be cached and re-executed."""
+        if n_symbols >= 2 ** 31:
+            raise ValueError(
+                f"n_symbols={n_symbols} exceeds int32 device-scatter indices")
+        if not isinstance(stream, DeviceStream):
+            stream = self.upload_stream(stream)
+        return self.executor.plan(batch, stream, n_symbols)
+
+    def execute(self, plan: DecodePlan) -> jax.Array:
+        """Run a prepared plan: compile on bucket miss, else reuse."""
+        self.stats.decodes += 1
+        exe = self._exec.get(plan.key)
+        if exe is None:
+            exe = self.executor.lower(plan)
+            self._exec[plan.key] = exe
+            self.stats.compiles += 1
+        else:
+            self.stats.cache_hits += 1
+        return self.executor.run(exe, plan)[:plan.n_symbols]
+
+    def decode_batch(self, batch: WalkBatch, stream,
+                     n_symbols: int) -> jax.Array:
+        return self.execute(self.prepare(batch, stream, n_symbols))

@@ -239,10 +239,9 @@ def _walk_one_split(stream: jax.Array, sym_lut: jax.Array, f_lut: jax.Array,
     return syms, keeps, qf
 
 
-@functools.partial(jax.jit, static_argnames=("n_bits", "ways", "n_steps", "n_symbols"))
-def _walk_batch_jit(stream, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi, start,
-                    stop, keep_lo, keep_hi, out_base, *, n_bits, ways, n_steps,
-                    n_symbols, ctx_of_index=None):
+def _walk_batch_impl(stream, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi, start,
+                     stop, keep_lo, keep_hi, out_base, *, n_bits, ways, n_steps,
+                     n_symbols, ctx_of_index=None):
     walk = functools.partial(_walk_one_split, stream, sym_lut, f_lut, F_lut,
                              n_bits=n_bits, ways=ways, n_steps=n_steps,
                              ctx_of_index=ctx_of_index)
@@ -262,6 +261,14 @@ def _walk_batch_jit(stream, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi, start,
     out = out.at[i.reshape(-1)].set(syms.reshape(-1).astype(jnp.int32),
                                     mode="drop", unique_indices=True)
     return out, qf
+
+
+# The jitted form every single-device caller uses.  The un-jitted
+# ``_walk_batch_impl`` stays importable so the sharded executor
+# (repro.parallel.decode_shard) can wrap the same walk in shard_map.
+_walk_batch_jit = jax.jit(
+    _walk_batch_impl,
+    static_argnames=("n_bits", "ways", "n_steps", "n_symbols"))
 
 
 def walk_decode_batch(batch: WalkBatch, stream: np.ndarray, model: StaticModel,

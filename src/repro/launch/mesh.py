@@ -24,6 +24,14 @@ def make_smoke_mesh(n_devices: int | None = None, model: int = 2):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_decode_mesh(n_shards: int | None = None):
+    """1-D decode mesh over every visible device: the sharded decode
+    executor (``parallel.decode_shard``) splits walk rows over the product
+    of the mesh axes, so one axis is the no-assumptions default."""
+    n = n_shards or len(jax.devices())
+    return jax.make_mesh((n,), ("shard",))
+
+
 def data_axes(mesh) -> tuple:
     """Mesh axes that carry the batch (DP) dimension."""
     return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -53,8 +53,11 @@ def vma_axes(axes: tuple):
 
 def pvary(tree):
     """pcast a pytree to 'varying' over the active vma axes (no-op default;
-    leaves that are already varying are left untouched)."""
-    if not _FLAG.vma_axes:
+    leaves that are already varying are left untouched).  On jax versions
+    without value-type checking (no ``jax.lax.pcast``, e.g. 0.4.x) this is a
+    no-op: the cross-pod step runs shard_map with ``check_rep=False`` there,
+    so no variance proof is required (see runtime.train)."""
+    if not _FLAG.vma_axes or not hasattr(jax.lax, "pcast"):
         return tree
 
     def one(a):

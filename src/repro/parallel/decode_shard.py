@@ -1,0 +1,115 @@
+"""Sharded multi-device decode: the paper's §3.3 scalability, mesh edition.
+
+Recoil's pitch is that one bitstream scales to whatever parallelism the
+decoder has; on a device mesh that parallelism is the mesh itself.  The
+:class:`ShardedExecutor` shards the padded split rows of a ``WalkBatch``
+across every device of a mesh with ``shard_map``:
+
+  * split arrays (``k``/``y``/``x0``/... — leading dim = bucketed split
+    count) arrive row-sharded over the product of the mesh axes; the stream
+    and slot tables arrive replicated;
+  * each device runs the SAME vmapped walk the single-device jnp executor
+    runs (``_walk_batch_impl``) over its local rows, scattering its kept
+    symbols into a full-size local output initialized to -1;
+  * kept output positions are disjoint across splits by construction
+    (disjoint ``[keep_lo, keep_hi)`` windows), so a ``lax.pmax`` over the
+    mesh axes merges the per-shard outputs exactly — every position is
+    written by one shard and -1 everywhere else;
+  * the merged output is replicated (``out_specs=P()``; the pmax makes the
+    shards identical, ``check_rep=False`` because shard_map cannot prove
+    that statically on this jax version).
+
+Bucketing: the split-row bucket is ``n_shards * work_bucket(ceil(S /
+n_shards))`` so every shard gets the same inert-padded row count and any
+split count within the per-shard bucket reuses the executable.  One
+bucketed AOT executable per (mesh, bucket) — the session's ``EngineStats``
+counts compiles exactly as for the single-device backends.
+
+Inputs are ``device_put`` with explicit NamedShardings at plan time, so the
+AOT executable's expected shardings always match and repeat traffic moves
+no split bytes through implicit reshards.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.engine.executors import JnpExecutor
+from repro.core.engine.plan import DecodePlan, work_bucket
+from repro.core.vectorized import _walk_batch_impl
+
+
+class ShardedExecutor(JnpExecutor):
+    """Multi-device decode over a mesh (see module docstring).
+
+    ``mesh=None`` builds a 1-D mesh over every visible device
+    (:func:`repro.launch.mesh.make_decode_mesh`); any mesh works — split
+    rows shard over the *product* of its axes, so the smoke meshes from
+    ``repro.launch.mesh.make_smoke_mesh`` are valid too.
+    """
+
+    impl = "sharded"
+
+    def __init__(self, model, packed_lut: bool, luts: tuple, *, mesh=None):
+        super().__init__(model, packed_lut, luts)
+        if mesh is None:
+            from repro.launch.mesh import make_decode_mesh
+            mesh = make_decode_mesh()
+        self.mesh = mesh
+        self.axes = tuple(mesh.axis_names)
+        self.n_shards = int(math.prod(mesh.shape[a] for a in self.axes))
+        self._repl = NamedSharding(mesh, P())
+        self._rows = NamedSharding(mesh, P(self.axes))
+        # Slot tables replicate across the mesh once, at construction.
+        self.luts = tuple(None if l is None else jax.device_put(l, self._repl)
+                          for l in luts)
+
+    # Streams upload replicated over the mesh (every shard reads the full
+    # stream; per-shard slab thinning is the Pallas path's job).
+    def _put(self, padded: np.ndarray) -> jax.Array:
+        return jax.device_put(padded, self._repl)
+
+    def _split_bucket(self, S: int) -> int:
+        """Equal inert-padded rows per shard: shard count x per-shard work
+        bucket, so ragged split counts still divide the mesh evenly."""
+        return self.n_shards * work_bucket(-(-S // self.n_shards))
+
+    def plan(self, batch, ds, n_symbols: int) -> DecodePlan:
+        base = super().plan(batch, ds, n_symbols)
+        stream, sym_lut, f_lut, F_lut, *arrs = base.args
+        # Fused streams built by the microbatcher (device-side concatenate)
+        # may come back without the explicit replicated sharding the AOT
+        # executable expects; re-pin (no-op for resident handles).
+        stream = jax.device_put(stream, self._repl)
+        arrs = tuple(jax.device_put(a, self._rows) for a in arrs)
+        key = (self.impl, self.n_shards, self.axes) + base.key[1:]
+        return DecodePlan(key=key,
+                          args=(stream, sym_lut, f_lut, F_lut, *arrs),
+                          statics=base.statics, n_symbols=base.n_symbols,
+                          out_bucket=base.out_bucket)
+
+    def lower(self, plan: DecodePlan):
+        st = plan.statics
+        axes = self.axes
+
+        def local(stream, sym_lut, f_lut, F_lut, *splits):
+            out, _qf = _walk_batch_impl(
+                stream, sym_lut, f_lut, F_lut, *splits,
+                n_bits=st["n_bits"], ways=st["ways"], n_steps=st["n_steps"],
+                n_symbols=st["n_symbols"], ctx_of_index=None)
+            return jax.lax.pmax(out, axes)
+
+        sharded = shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(), P(), P(), P()) + (P(axes),) * 10,
+            out_specs=P(), check_rep=False)
+        return jax.jit(sharded).lower(*plan.args).compile()
+
+    def run(self, exe, plan: DecodePlan) -> jax.Array:
+        return exe(*plan.args)

@@ -9,7 +9,26 @@ greedy or temperature sampling, straggler-safe timing hooks.
 once (stream device-resident), split metadata thinned per request to the
 client's parallelism, and every decode dispatched through a persistent
 :class:`repro.core.engine.DecoderSession` so steady-state traffic never
-recompiles (DESIGN.md §4).
+recompiles (DESIGN.md §4).  Two request paths:
+
+  * ``decode(name, n_threads)`` — immediate single dispatch.  The prepared
+    :class:`~repro.core.engine.DecodePlan` is memoized per
+    ``(name, n_threads)``, so repeat traffic skips the host-side thinning
+    (``combine_plan`` + ``build_split_states`` + ``WalkBatch.from_splits``)
+    AND the engine's padding/arg assembly — the steady state is one cached
+    executable call on cached device args.
+  * ``submit(name, n_threads) -> DecodeTicket`` — microbatched.  Pending
+    requests coalesce into ONE fused dispatch (``concat_walk_batches``:
+    per-request ``out_base`` offsets write disjoint output windows; across
+    different contents the resident streams are fused with per-stream word
+    offsets applied to ``q0``).  Results come back as per-request device
+    slices of the fused output.  Flush policy: an explicit ``flush()``, a
+    full microbatch (``microbatch`` requests pending), a submit arriving
+    after the oldest pending request has waited ``max_delay_ms``, or a
+    ``DecodeTicket.result()`` on a still-pending ticket.  ``max_delay_ms``
+    is a latency bound checked at submit time — size is the primary
+    trigger; keep it comfortably above per-request COLD prep time or a
+    first burst fragments into partial groups.
 """
 
 from __future__ import annotations
@@ -22,9 +41,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import DecoderSession, DeviceStream
+from repro.core.engine import (DecodePlan, DecoderSession, DeviceStream,
+                               concat_walk_batches, pow2_bucket)
 from repro.core.rans import StaticModel
-from repro.core.recoil import RecoilPlan, combine_plan
+from repro.core.recoil import RecoilPlan, build_split_states, combine_plan
+from repro.core.vectorized import WalkBatch
 from repro.models.model import LM
 
 
@@ -85,33 +106,258 @@ class _Content:
     final_states: np.ndarray
 
 
+@dataclasses.dataclass
+class ServiceStats:
+    """Engine counters + the service's own plan/microbatch accounting."""
+
+    compiles: int
+    cache_hits: int
+    decodes: int
+    plan_hits: int
+    plan_misses: int
+    coalesced_requests: int
+    fused_dispatches: int
+    flushes: int
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class DecodeTicket:
+    """Handle for a submitted (possibly coalesced) decode request."""
+
+    __slots__ = ("_svc", "out", "err")
+
+    def __init__(self, svc: "DecodeService"):
+        self._svc = svc
+        self.out = None
+        self.err = None
+
+    def result(self) -> jax.Array:
+        """The request's device symbol array; forces a flush if the fused
+        dispatch holding this request has not run yet.  Re-raises the
+        dispatch error if the flush holding this request failed."""
+        if self.out is None and self.err is None:
+            self._svc.flush()
+        if self.err is not None:
+            raise self.err
+        if self.out is None:
+            raise RuntimeError("request was never dispatched")
+        return self.out
+
+
 class DecodeService:
     """Serve Recoil-encoded content to clients of any parallel capacity.
 
     One :class:`DecoderSession` per service (one model, one executable
     cache).  ``register`` uploads a payload's bitstream to the device once;
-    ``decode`` thins the split metadata to the request's thread count (a
-    pure metadata deletion, paper §3.3) and runs the cached bucketed
-    executable — zero recompiles for request sizes within a bucket.
+    ``decode``/``submit`` thin the split metadata to the request's thread
+    count (a pure metadata deletion, paper §3.3) and run the cached
+    bucketed executable — zero recompiles for request sizes within a
+    bucket.  See the module docstring for the two request paths.
     """
 
-    def __init__(self, model: StaticModel, *, impl: str = "jnp", **session_kw):
+    # Fused-plan memo bound (FIFO eviction): each entry pins fused device
+    # split arrays, so distinct request groups must not accumulate forever.
+    MAX_FUSED_PLANS = 256
+
+    def __init__(self, model: StaticModel, *, impl: str = "jnp",
+                 microbatch: int = 8, max_delay_ms: float = 50.0,
+                 **session_kw):
         self.session = DecoderSession(model, impl=impl, **session_kw)
+        self.microbatch = int(microbatch)
+        self.max_delay_ms = float(max_delay_ms)
         self._contents: dict[str, _Content] = {}
+        # (name, n_threads) -> prepared request, two granularities: the
+        # thinned WalkBatch (fusable) and the full DecodePlan (single path).
+        self._batches: dict[tuple, tuple[WalkBatch, int]] = {}
+        self._plans: dict[tuple, DecodePlan] = {}
+        # Fused-dispatch memo: a request GROUP that recurs (hot working set
+        # under steady traffic) reuses its fused DecodePlan + slice offsets,
+        # so a warm flush is one cached executable call, zero host prep.
+        self._fused_plans: dict[tuple, tuple[DecodePlan, list[int], int]] = {}
+        self._pending: list[tuple[DecodeTicket, tuple, WalkBatch, int]] = []
+        self._pending_t0 = 0.0
+        self._plan_hits = 0
+        self._plan_misses = 0
+        self._coalesced = 0
+        self._fused = 0
+        self._flushes = 0
 
     def register(self, name: str, plan: RecoilPlan, stream: np.ndarray,
                  final_states: np.ndarray) -> None:
+        # Pending requests hold thinned batches of the CURRENT content;
+        # dispatch them against it before it is replaced (a re-registered
+        # name with stale pending metadata would otherwise decode the new
+        # stream with the old split windows — silently wrong symbols).
+        if any(key[0] == name for _, key, _, _ in self._pending):
+            self.flush()
         self._contents[name] = _Content(
             stream=self.session.upload_stream(stream), plan=plan,
             final_states=np.asarray(final_states, np.uint32))
+        for cache in (self._batches, self._plans):   # re-registration
+            for key in [k for k in cache if k[0] == name]:
+                del cache[key]
+        self._fused_plans.clear()
+
+    # ------------------------------------------------------------------
+    # Request preparation (memoized per (name, n_threads))
+    # ------------------------------------------------------------------
+
+    def _thinned_batch(self, name: str, n_threads: int) -> tuple[WalkBatch, int]:
+        """Memoized host prep.  ``plan_hits``/``plan_misses`` count here (and
+        on the deeper ``_plans`` memo in :meth:`decode`): every request
+        increments exactly one of the two counters exactly once — a hit
+        means the per-request host preparation was skipped at some layer."""
+        key = (name, n_threads)
+        hit = self._batches.get(key)
+        if hit is not None:
+            self._plan_hits += 1
+            return hit
+        self._plan_misses += 1
+        c = self._contents[name]
+        plan = combine_plan(c.plan, n_threads)
+        batch = WalkBatch.from_splits(
+            build_split_states(plan, c.final_states), plan.ways)
+        self._batches[key] = (batch, plan.n_symbols)
+        return self._batches[key]
+
+    # ------------------------------------------------------------------
+    # Immediate path
+    # ------------------------------------------------------------------
 
     def decode(self, name: str, n_threads: int) -> jax.Array:
         """Decode registered content at the client's parallelism; returns a
         device int32 symbol array (no host round-trip)."""
-        c = self._contents[name]
-        plan = combine_plan(c.plan, n_threads)
-        return self.session.decode(plan, c.stream, c.final_states)
+        key = (name, n_threads)
+        plan = self._plans.get(key)
+        if plan is None:
+            batch, n = self._thinned_batch(name, n_threads)
+            plan = self.session.prepare(batch, self._contents[name].stream, n)
+            self._plans[key] = plan
+        else:
+            self._plan_hits += 1
+        return self.session.execute(plan)
+
+    # ------------------------------------------------------------------
+    # Microbatched path
+    # ------------------------------------------------------------------
+
+    def submit(self, name: str, n_threads: int) -> DecodeTicket:
+        """Queue a request for coalescing (see module docstring for the
+        flush policy)."""
+        now = time.perf_counter()
+        if self._pending and (now - self._pending_t0) * 1e3 > self.max_delay_ms:
+            self.flush()
+        key = (name, n_threads)
+        batch, n = self._thinned_batch(name, n_threads)
+        ticket = DecodeTicket(self)
+        if not self._pending:
+            self._pending_t0 = now
+        self._pending.append((ticket, key, batch, n))
+        if len(self._pending) >= self.microbatch:
+            self.flush()
+        return ticket
+
+    def flush(self) -> None:
+        """Dispatch all pending requests as one fused executable call.  On a
+        dispatch error the group's tickets carry the exception (re-raised by
+        ``result()``) rather than stranding as forever-pending."""
+        reqs, self._pending = self._pending, []
+        if not reqs:
+            return
+        try:
+            self._dispatch(reqs)
+        except Exception as e:
+            for ticket, _, _, _ in reqs:
+                ticket.err = e
+            raise
+
+    def _dispatch(self, reqs) -> None:
+        self._flushes += 1
+        if len(reqs) == 1:
+            ticket, key, batch, n = reqs[0]
+            plan = self._plans.get(key)
+            if plan is None:
+                plan = self.session.prepare(
+                    batch, self._contents[key[0]].stream, n)
+                self._plans[key] = plan
+            ticket.out = self.session.execute(plan)
+            return
+        self._fused += 1
+        self._coalesced += len(reqs)
+        # Canonical request order: the fused layout is arrival-order
+        # independent, so any permutation of the same group shares one memo
+        # entry (tickets travel with their request; slices still land).
+        reqs.sort(key=lambda r: r[1])
+        group = tuple(key for _, key, _, _ in reqs)
+        hit = self._fused_plans.get(group)
+        if hit is None:
+            if len(self._fused_plans) >= self.MAX_FUSED_PLANS:
+                self._fused_plans.pop(next(iter(self._fused_plans)))
+            plan, sym_off, total = self._prepare_fused(reqs)
+            self._fused_plans[group] = (plan, sym_off, total)
+        else:
+            plan, sym_off, total = hit
+        out = self.session.execute(plan)
+        for (ticket, _, _, n), off in zip(reqs, sym_off):
+            ticket.out = out[off:off + n]
+
+    def _prepare_fused(self, reqs) -> tuple[DecodePlan, list[int], int]:
+        streams: dict[int, DeviceStream] = {}
+        for _, key, _, _ in reqs:
+            ds = self._contents[key[0]].stream
+            streams.setdefault(id(ds), ds)
+        if len(streams) == 1:
+            fused_ds = next(iter(streams.values()))
+            word_off = {id(fused_ds): 0}
+        else:
+            fused_ds, word_off = _fuse_streams(list(streams.values()))
+        sym_off, total = [], 0
+        for _, _, _, n in reqs:
+            sym_off.append(total)
+            total += n
+        fused = concat_walk_batches(
+            [b for _, _, b, _ in reqs], sym_off,
+            [word_off[id(self._contents[key[0]].stream)]
+             for _, key, _, _ in reqs])
+        return self.session.prepare(fused, fused_ds, total), sym_off, total
 
     @property
-    def stats(self):
-        return self.session.stats
+    def stats(self) -> ServiceStats:
+        e = self.session.stats
+        return ServiceStats(
+            compiles=e.compiles, cache_hits=e.cache_hits, decodes=e.decodes,
+            plan_hits=self._plan_hits, plan_misses=self._plan_misses,
+            coalesced_requests=self._coalesced, fused_dispatches=self._fused,
+            flushes=self._flushes)
+
+
+def _fuse_streams(streams: list[DeviceStream]) -> tuple[DeviceStream, dict]:
+    """Concatenate resident streams for a cross-content fused dispatch.
+
+    Layout preserves each stream's padded bucket window, so word offsets are
+    bucket-aligned and the per-request ``q0`` shift is exact.  Device words
+    fuse on device (no host round-trip) when every stream is device-resident
+    (jnp/sharded backends); otherwise the fused stream is host-side
+    (Pallas, which slabs from host anyway).
+    """
+    word_off: dict[int, int] = {}
+    total = 0
+    for ds in streams:
+        word_off[id(ds)] = total
+        total += ds.bucket
+    bucket = pow2_bucket(total, 1024)
+    if all(ds.words is not None for ds in streams):
+        parts = [ds.words for ds in streams]
+        if bucket > total:
+            parts.append(jnp.zeros(bucket - total, jnp.uint32))
+        fused = DeviceStream(words=jnp.concatenate(parts), host=None,
+                             n_words=total, bucket=bucket)
+        return fused, word_off
+    host = np.zeros(bucket, np.uint32)
+    for ds in streams:
+        host[word_off[id(ds)]:word_off[id(ds)] + ds.n_words] = \
+            ds.host.astype(np.uint32)
+    fused = DeviceStream(words=None, host=host, n_words=total, bucket=bucket)
+    return fused, word_off

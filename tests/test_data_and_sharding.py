@@ -97,10 +97,6 @@ def test_sharding_resolver_divisibility_and_used_axes():
 
 
 @pytest.mark.slow
-@pytest.mark.skipif(not hasattr(jax, "shard_map"),
-                    reason="runtime/train.py uses the jax >= 0.6 "
-                           "partial-manual API (jax.shard_map with "
-                           "axis_names/check_vma); see ROADMAP open items")
 def test_crosspod_compressed_train_step_multidevice():
     """int8+EF cross-pod gradient sync on a (pod=2, data=2) fake mesh:
     loss must decrease and stay consistent with uncompressed within EF

@@ -3,6 +3,10 @@
 The compile-count regression tests rely on the session's own counter, which
 increments exactly when an AOT executable is built (``jit(...).lower(...)
 .compile()`` on a bucket miss) — a bucket hit physically cannot re-trace.
+
+Also covers the plan/executor split (DecodePlan reuse through
+``prepare``/``execute``), the service-level plan memoization and microbatch
+coalescing, and the cross-impl DeviceStream upload cache.
 """
 
 import numpy as np
@@ -10,7 +14,8 @@ import pytest
 from numpy.testing import assert_allclose
 
 from repro.core import conventional, recoil
-from repro.core.engine import DecoderSession, pow2_bucket
+from repro.core.engine import (DecoderSession, concat_walk_batches,
+                               pow2_bucket)
 from repro.core.rans import RansParams, StaticModel
 from repro.core.recoil import build_split_states
 from repro.core.vectorized import WalkBatch, encode_interleaved_fast
@@ -105,6 +110,153 @@ def test_decode_service_thins_and_serves():
     # the repeated 4-thread request reused its bucket executable
     assert svc.stats.compiles == 2
     assert svc.stats.cache_hits == 1
+
+
+def test_prepare_execute_plan_reuse():
+    """A cached DecodePlan re-executes with zero host prep and no compile."""
+    model, syms = _model_and_syms(n=20_000)
+    enc = encode_interleaved_fast(syms[:20_000], model)
+    rplan = recoil.plan_splits(enc, 8)
+    batch = WalkBatch.from_splits(
+        build_split_states(rplan, enc.final_states), rplan.ways)
+    sess = DecoderSession(model)
+    ds = sess.upload_stream(enc.stream)
+    plan = sess.prepare(batch, ds, rplan.n_symbols)
+    for _ in range(3):
+        out = sess.execute(plan)
+        assert_allclose(np.asarray(out), syms[:20_000], rtol=0, atol=0)
+    assert sess.stats.compiles == 1
+    assert sess.stats.cache_hits == 2
+
+
+def test_cross_impl_stream_handle_uploads_once():
+    """A pallas-registered handle (words=None) used by a jnp session must
+    upload the full stream exactly once, not once per decode."""
+    model, syms = _model_and_syms(n=20_000)
+    enc = encode_interleaved_fast(syms[:20_000], model)
+    plan = recoil.plan_splits(enc, 8)
+    pal = DecoderSession(model, impl="pallas")
+    ds = pal.upload_stream(enc.stream)
+    assert ds.words is None
+    sess = DecoderSession(model, impl="jnp")
+    before = sess.executor.stream_uploads
+    for _ in range(3):
+        out = sess.decode(plan, ds, enc.final_states)
+        assert_allclose(np.asarray(out), syms[:20_000], rtol=0, atol=0)
+    assert sess.executor.stream_uploads - before == 1
+
+
+def test_service_memoizes_thinned_plans():
+    model, syms = _model_and_syms(n=30_000)
+    enc = encode_interleaved_fast(syms[:30_000], model)
+    plan = recoil.plan_splits(enc, 32)
+    svc = DecodeService(model)
+    svc.register("content", plan, enc.stream, enc.final_states)
+    for _ in range(3):
+        out = svc.decode("content", 8)
+        assert_allclose(np.asarray(out), syms[:30_000], rtol=0, atol=0)
+    s = svc.stats
+    assert s.plan_misses == 1 and s.plan_hits == 2, s.snapshot()
+    assert s.compiles == 1 and s.cache_hits == 2, s.snapshot()
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_microbatch_coalescing_bit_exact(impl):
+    """N submitted requests (mixed contents and thread counts) fuse into ONE
+    dispatch whose per-request slices equal the sequential decodes."""
+    rng = np.random.default_rng(3)
+    params = RansParams(n_bits=11, ways=32)
+    payloads = {
+        f"c{i}": np.minimum(
+            rng.exponential(40.0, size=8_000 + 900 * i).astype(np.int64), 255)
+        for i in range(3)}
+    model = StaticModel.from_symbols(
+        np.concatenate(list(payloads.values())), 256, params)
+    svc = DecodeService(model, impl=impl, microbatch=8)
+    for name, syms in payloads.items():
+        enc = encode_interleaved_fast(syms, model)
+        svc.register(name, recoil.plan_splits(enc, 12), enc.stream,
+                     enc.final_states)
+    reqs = [("c0", 4), ("c1", 8), ("c2", 12), ("c0", 12)]
+    seq = [np.asarray(svc.decode(n, t)) for n, t in reqs]
+    tickets = [svc.submit(n, t) for n, t in reqs]
+    svc.flush()
+    fused = svc.stats.fused_dispatches
+    assert fused == 1, svc.stats.snapshot()
+    for (name, _), ref, tk in zip(reqs, seq, tickets):
+        got = np.asarray(tk.result())
+        np.testing.assert_array_equal(got, ref)
+        np.testing.assert_array_equal(got, payloads[name])
+
+
+def test_microbatch_full_batch_autoflush_and_result_flush():
+    model, syms = _model_and_syms(n=10_000)
+    enc = encode_interleaved_fast(syms[:10_000], model)
+    plan = recoil.plan_splits(enc, 8)
+    svc = DecodeService(model, microbatch=2)
+    svc.register("c", plan, enc.stream, enc.final_states)
+    # microbatch=2: the second submit auto-flushes
+    t1, t2 = svc.submit("c", 4), svc.submit("c", 8)
+    assert t1.out is not None and t2.out is not None
+    np.testing.assert_array_equal(np.asarray(t1.result()), syms[:10_000])
+    np.testing.assert_array_equal(np.asarray(t2.result()), syms[:10_000])
+    # a lone pending submit is flushed by result()
+    t3 = svc.submit("c", 4)
+    assert t3.out is None
+    np.testing.assert_array_equal(np.asarray(t3.result()), syms[:10_000])
+    assert svc.stats.flushes == 2
+
+
+def test_failed_flush_surfaces_error_on_tickets(monkeypatch):
+    """A dispatch error during flush must reach every ticket in the group
+    via result() — never a silent None."""
+    model, syms = _model_and_syms(n=8_000)
+    enc = encode_interleaved_fast(syms[:8_000], model)
+    svc = DecodeService(model, microbatch=8)
+    svc.register("c", recoil.plan_splits(enc, 8), enc.stream,
+                 enc.final_states)
+    t1, t2 = svc.submit("c", 4), svc.submit("c", 8)
+    monkeypatch.setattr(svc.session, "execute",
+                        lambda plan: (_ for _ in ()).throw(
+                            RuntimeError("dispatch boom")))
+    with pytest.raises(RuntimeError, match="dispatch boom"):
+        svc.flush()
+    for t in (t1, t2):
+        with pytest.raises(RuntimeError, match="dispatch boom"):
+            t.result()
+
+
+def test_reregister_flushes_pending_against_old_content():
+    """Re-registering a name with requests pending must dispatch them
+    against the content they were thinned from, not the replacement."""
+    model, syms = _model_and_syms(n=16_000)
+    a, b = syms[:8_000], syms[8_000:16_000]
+    enc_a = encode_interleaved_fast(a, model)
+    enc_b = encode_interleaved_fast(b, model)
+    svc = DecodeService(model, microbatch=8)
+    svc.register("c", recoil.plan_splits(enc_a, 8), enc_a.stream,
+                 enc_a.final_states)
+    ticket = svc.submit("c", 4)
+    svc.register("c", recoil.plan_splits(enc_b, 8), enc_b.stream,
+                 enc_b.final_states)
+    np.testing.assert_array_equal(np.asarray(ticket.result()), a)
+    t2 = svc.submit("c", 4)
+    np.testing.assert_array_equal(np.asarray(t2.result()), b)
+
+
+def test_concat_walk_batches_guards():
+    model, syms = _model_and_syms(n=4_000)
+    enc = encode_interleaved_fast(syms[:4_000], model)
+    plan = recoil.plan_splits(enc, 4)
+    batch = WalkBatch.from_splits(
+        build_split_states(plan, enc.final_states), plan.ways)
+    with pytest.raises(ValueError, match="int32"):
+        concat_walk_batches([batch, batch], [0, 2 ** 31 - 100])
+    other = WalkBatch.from_splits(
+        build_split_states(plan, enc.final_states), plan.ways)
+    object.__setattr__(other, "ways", 64)
+    with pytest.raises(ValueError, match="ways"):
+        concat_walk_batches([batch, other], [0, 4_000])
 
 
 def test_out_base_is_int32_and_guarded():
