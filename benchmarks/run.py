@@ -9,6 +9,7 @@ Emits CSV to stdout and benchmarks/results/*.csv.  Suites:
     throughput        Figure 7     CPU decode MB/s at matched parallelism
     combine           §3.3         server-side metadata thinning latency
     engine            DESIGN §4    cache-warm DecoderSession vs one-shot path
+    encode            DESIGN §5    cache-warm ingest engine vs host encode+plan
     roofline          §Roofline    aggregates dry-run JSONs (if present)
 """
 
@@ -20,7 +21,7 @@ import os
 import sys
 import time
 
-from . import (bench_combine, bench_compression, bench_engine,
+from . import (bench_combine, bench_compression, bench_encode, bench_engine,
                bench_partition_sweep, bench_roofline, bench_throughput)
 
 SUITES = {
@@ -29,6 +30,7 @@ SUITES = {
     "throughput": bench_throughput.run,
     "combine": bench_combine.run,
     "engine": bench_engine.run,
+    "encode": bench_encode.run,
     "roofline": bench_roofline.run,
 }
 

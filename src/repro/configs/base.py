@@ -103,7 +103,7 @@ class ArchConfig:
         return self.enc_layers > 0
 
     def runs_shape(self, shape_name: str) -> bool:
-        """Cell applicability (skips recorded in DESIGN.md §5)."""
+        """Cell applicability (skips recorded in DESIGN.md §6)."""
         if shape_name == "long_500k":
             return self.sub_quadratic or self.family == "hybrid"
         return True

@@ -3,7 +3,7 @@ vocab=32001, ssm_state=16; parallel attention+mamba heads per layer, 128
 learned meta tokens, SWA on the attention path => runs long_500k.
 25 heads do not divide the 16-way model axis: attention runs
 head-replicated (sharding resolver fallback; model is 1.5B so this fits) with
-TP on the SSM inner dim and MLP — recorded in DESIGN.md §5.
+TP on the SSM inner dim and MLP — recorded in DESIGN.md §6.
 [arXiv:2411.13676; hf-verified]"""
 
 from .base import ArchConfig, register

@@ -13,6 +13,8 @@ Public API (see DESIGN.md §1 for the mapping to paper sections):
   container    — on-wire formats for variations (a)-(e)
   engine       — persistent DecoderSession (device-resident tables, bucketed
                  executable cache; DESIGN.md §4)
+  encode       — persistent EncoderSession: device-side encode + Def-4.1
+                 split planning, the ingest mirror of engine (DESIGN.md §5)
 """
 
 from .rans import DEFAULT_PARAMS, RansParams, StaticModel  # noqa: F401
@@ -28,3 +30,4 @@ from .vectorized import (WalkBatch, decode_conventional_fast,  # noqa: F401
                          walk_decode_batch)
 from .engine import (DecoderSession, DeviceStream,  # noqa: F401
                      pow2_bucket, work_bucket)
+from .encode import EncoderSession, IngestResult  # noqa: F401

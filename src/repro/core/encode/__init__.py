@@ -1,0 +1,36 @@
+"""Persistent ingest engine: encode + split planning as bucketed executables.
+
+The decode side has been an engine since PR 1 (``core.engine``): a plan IR,
+pluggable executors, a session with a bucketed AOT executable cache.  The
+encode side — the paper's §4.1 interleaved encoder with its emission log,
+plus the Definition-4.1 split-point heuristic — was still a host pipeline:
+``encode_interleaved_fast`` re-traced per content size and handed host
+arrays to a numpy heuristic, and ``DecodeService.register`` re-uploaded the
+stream the encoder had just pulled down.  This package makes the codec
+symmetric: both directions are engines.
+
+  * ``ops``       — the group-stepped encode scan (moved here from
+                    ``core.vectorized``), device-side emission compaction,
+                    the per-way emission index, and the jnp Definition-4.1
+                    heuristic (one fused jit: symbols -> stream + split
+                    metadata, no host round-trips);
+  * ``plan``      — the :class:`EncodePlan` IR (bucketed cache key + padded
+                    device args + static lowering kwargs);
+  * ``executors`` — pluggable backends behind the same plan/lower/run
+                    contract as the decode engine (``jnp`` today);
+  * ``session``   — :class:`EncoderSession`: a thin plans -> executables
+                    cache with exact compile accounting, single-content
+                    ``encode``/``ingest`` and vmapped ``ingest_batch``.
+
+``DecodeService.ingest(name, symbols, n_splits)`` (``runtime.serve``) feeds
+the engine's device-resident stream straight into registration.
+"""
+
+from .plan import EncodePlan
+from .executors import EncodeExecutor, JnpEncodeExecutor, make_encode_executor
+from .session import EncoderSession, EncodeStats, IngestResult
+
+__all__ = [
+    "EncodePlan", "EncodeExecutor", "EncoderSession", "EncodeStats",
+    "IngestResult", "JnpEncodeExecutor", "make_encode_executor",
+]

@@ -1,0 +1,187 @@
+"""Pluggable ingest executors behind the decode engine's contract.
+
+An :class:`EncodeExecutor` owns one backend's request preparation and
+lowering, the same shape as ``core.engine.executors``:
+
+    plan(symbols, n_splits)          -> EncodePlan  (host prep; pure, cacheable)
+    lower(plan, rounds, capacity)    -> executable  (AOT jit().lower().compile())
+    run(exe, plan)                   -> device dict (stream/log/metadata arrays)
+
+:class:`~repro.core.encode.session.EncoderSession` composes an executor
+with the executable cache and stats; it never branches on the backend.
+The one backend today is ``jnp`` — the XLA pipeline of
+:func:`~repro.core.encode.ops.ingest_pipeline`.  The encoder scan is
+sequential per way by construction (rANS), so unlike decode there is no
+split-parallel Pallas/sharded variant; batching across *contents*
+(:meth:`JnpEncodeExecutor.plan_batch`, a vmap over the whole pipeline) is
+the multi-block axis instead.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ops import ingest_pipeline
+from .plan import (EncodePlan, splits_slot_bucket, stream_capacity_buckets,
+                   work_bucket, pow2_bucket)
+
+_PIPE_STATICS = ("n_bits", "ways", "words_bucket", "splits_bucket", "window",
+                 "expand_rounds")
+
+
+def _pipeline_batch(sym_gw, active_gw, f_tab, F_tab, n_symbols, n_splits,
+                    ctx_gw=None, **statics):
+    """vmap of the full pipeline over a leading content axis (tables
+    broadcast).  Inert rows are empty contents (``n_symbols = 0``)."""
+    in_axes = (0, 0, None, None, 0, 0, None if ctx_gw is None else 0)
+    return jax.vmap(
+        lambda s, a, f, F, n, m, c: ingest_pipeline(s, a, f, F, n, m, c,
+                                                    **statics),
+        in_axes=in_axes)(sym_gw, active_gw, f_tab, F_tab, n_symbols,
+                         n_splits, ctx_gw)
+
+
+class EncodeExecutor:
+    """Backend contract (see module docstring).  ``f_tab``/``F_tab`` are the
+    session's device-resident frequency tables — ``[A]``-shaped for a
+    static model, ``[C, A]`` for a context (adaptive) model."""
+
+    impl = "?"
+
+    def __init__(self, f_tab: jax.Array, F_tab: jax.Array, *, n_bits: int,
+                 ways: int, adaptive: bool, window: int):
+        self.f_tab = f_tab
+        self.F_tab = F_tab
+        self.n_bits = n_bits
+        self.ways = ways
+        self.adaptive = adaptive
+        self.window = window
+
+    def plan(self, symbols: np.ndarray, n_splits: int,
+             ctx: np.ndarray | None = None) -> EncodePlan:
+        raise NotImplementedError
+
+    def lower(self, plan: EncodePlan, expand_rounds: int,
+              words_bucket: int):
+        raise NotImplementedError
+
+    def run(self, exe, plan: EncodePlan) -> dict:
+        raise NotImplementedError
+
+
+class JnpEncodeExecutor(EncodeExecutor):
+    """XLA ingest pipeline (encode scan + compaction + Def-4.1 planning)."""
+
+    impl = "jnp"
+
+    # ------------------------------------------------------------------
+    # Host prep
+    # ------------------------------------------------------------------
+
+    def _group_arrays(self, symbols: np.ndarray, g_bucket: int,
+                      ctx: np.ndarray | None):
+        """Pad a content to ``g_bucket`` W-wide groups with inert tails."""
+        W = self.ways
+        syms = np.asarray(symbols, dtype=np.int32).ravel()
+        N = len(syms)
+        pad = g_bucket * W - N
+        sym_gw = np.concatenate([syms, np.zeros(pad, np.int32)])
+        active = np.concatenate([np.ones(N, bool), np.zeros(pad, bool)])
+        out = [sym_gw.reshape(g_bucket, W), active.reshape(g_bucket, W)]
+        if self.adaptive:
+            if ctx is None or len(np.asarray(ctx)) != N:
+                raise ValueError(
+                    "adaptive encode needs a per-symbol ctx map covering "
+                    f"all {N} symbols")
+            ctx_gw = np.concatenate([np.asarray(ctx, np.int32),
+                                     np.zeros(pad, np.int32)])
+            out.append(ctx_gw.reshape(g_bucket, W))
+        else:
+            out.append(None)
+        return out
+
+    def _statics(self, splits_b: int) -> dict:
+        return dict(n_bits=self.n_bits, ways=self.ways,
+                    splits_bucket=splits_b, window=self.window)
+
+    def plan(self, symbols: np.ndarray, n_splits: int,
+             ctx: np.ndarray | None = None) -> EncodePlan:
+        N = int(np.asarray(symbols).size)
+        g_b = work_bucket(-(-N // self.ways) if N else 0, 1)
+        fast_b, full_b = stream_capacity_buckets(N)
+        splits_b = splits_slot_bucket(n_splits)
+        sym_gw, active, ctx_gw = self._group_arrays(symbols, g_b, ctx)
+        key = (self.impl, self.adaptive, self.n_bits, self.ways, g_b,
+               splits_b, self.window)
+        args = (jnp.asarray(sym_gw), jnp.asarray(active), self.f_tab,
+                self.F_tab, jnp.int32(N), jnp.int32(n_splits),
+                None if ctx_gw is None else jnp.asarray(ctx_gw))
+        return EncodePlan(key=key, args=args, statics=self._statics(splits_b),
+                          n_symbols=N, n_splits=n_splits,
+                          words_bucket=fast_b, words_bucket_full=full_b)
+
+    def plan_batch(self, contents: Sequence[np.ndarray], n_splits,
+                   ctxs: Sequence[np.ndarray] | None = None) -> EncodePlan:
+        """One plan for B contents: shared buckets sized to the largest
+        content, batch rows padded (to the pow2 batch bucket) with empty
+        contents, the whole pipeline vmapped over the content axis."""
+        B = len(contents)
+        if B == 0:
+            raise ValueError("plan_batch needs at least one content")
+        sizes = [int(np.asarray(c).size) for c in contents]
+        n_splits = ([int(n_splits)] * B if np.isscalar(n_splits)
+                    else [int(n) for n in n_splits])
+        if len(n_splits) != B:
+            raise ValueError("n_splits must be a scalar or one per content")
+        b_b = pow2_bucket(B)
+        g_b = work_bucket(max(-(-n // self.ways) for n in sizes), 1)
+        fast_b, full_b = stream_capacity_buckets(max(sizes))
+        splits_b = splits_slot_bucket(max(n_splits))
+        empty = np.zeros(0, np.int32)
+        rows = [self._group_arrays(c, g_b, None if ctxs is None else ctxs[i])
+                for i, c in enumerate(contents)]
+        rows += [self._group_arrays(empty, g_b, empty if self.adaptive
+                                    else None)] * (b_b - B)
+        sym_gw = np.stack([r[0] for r in rows])
+        active = np.stack([r[1] for r in rows])
+        ctx_gw = (np.stack([r[2] for r in rows]) if self.adaptive else None)
+        key = (self.impl, "batch", b_b, self.adaptive, self.n_bits,
+               self.ways, g_b, splits_b, self.window)
+        args = (jnp.asarray(sym_gw), jnp.asarray(active), self.f_tab,
+                self.F_tab,
+                jnp.asarray(np.asarray(sizes + [0] * (b_b - B), np.int32)),
+                jnp.asarray(np.asarray(n_splits + [1] * (b_b - B),
+                                       np.int32)),
+                None if ctx_gw is None else jnp.asarray(ctx_gw))
+        return EncodePlan(key=key, args=args, statics=self._statics(splits_b),
+                          n_symbols=max(sizes), n_splits=max(n_splits),
+                          words_bucket=fast_b, words_bucket_full=full_b,
+                          batch=B)
+
+    # ------------------------------------------------------------------
+    # Lower / run
+    # ------------------------------------------------------------------
+
+    def lower(self, plan: EncodePlan, expand_rounds: int, words_bucket: int):
+        fn = _pipeline_batch if plan.batch else ingest_pipeline
+        jitted = jax.jit(fn, static_argnames=_PIPE_STATICS)
+        return jitted.lower(*plan.args, **plan.statics,
+                            words_bucket=words_bucket,
+                            expand_rounds=expand_rounds).compile()
+
+    def run(self, exe, plan: EncodePlan) -> dict:
+        # plan.args includes the trailing ctx slot (None for static models —
+        # an empty pytree, so the compiled signature matches either way).
+        return exe(*plan.args)
+
+
+def make_encode_executor(impl: str, f_tab, F_tab, *, n_bits, ways, adaptive,
+                         window) -> EncodeExecutor:
+    if impl == "jnp":
+        return JnpEncodeExecutor(f_tab, F_tab, n_bits=n_bits, ways=ways,
+                                 adaptive=adaptive, window=window)
+    raise ValueError(f"unknown encode impl {impl!r}")

@@ -1,0 +1,337 @@
+"""Device-side ingest ops: encode scan, emission compaction, split planning.
+
+Everything here is pure jnp and composes into ONE jitted pipeline
+(:func:`ingest_pipeline`): padded symbol groups in, padded stream words +
+emission log + Definition-4.1 split metadata out.  The only host traffic an
+ingest needs afterwards is the (tiny) split metadata and a handful of
+scalars — the stream itself never leaves the device.
+
+The design constraint is that XLA:CPU scatters and sorts are two orders of
+magnitude slower than gathers, so every stage is **gather-only**:
+
+  * :func:`encode_scan` — the W-lane group-stepped interleaved encoder
+    (paper §4.1 / Giesen's interleaving), moved here from
+    ``core.vectorized``.  One (unrolled) ``lax.scan`` step encodes a group
+    of W symbols; ways never interact during encode, so the scan recovers
+    W-lane parallelism.  Emission *order* is implied by the row-major
+    position of the per-group emit masks.
+  * :func:`emission_layout` — the closed-form order isomorphism.  With
+    ``gc[g]`` the inclusive per-group emission counts cumsum and
+    ``lr[g, j]`` the exclusive in-group lane ranks, the stream offset of
+    emission ``(g, j)`` is ``gc[g-1] + lr[g, j]`` — and both directions of
+    the map are pure cumsum + gather:
+      - offset -> emission (the compaction): a two-level *select* — a
+        binary search of ``q+1`` in ``gc`` (a G-sized, cache-resident
+        table) picks the group, an in-row rank match picks the lane;
+      - symbol -> offset (the heuristic's ``center``): one gather,
+        ``base[g] + lr[g, j] + mask[g, j]`` counts emissions at symbols
+        ``<= k``.
+  * :func:`plan_split_scan` — the Definition-4.1 greedy heuristic as a
+    ``lax.scan`` over split slots, with the paper's backward scan evaluated
+    **in symbol space**: the last emission of way ``j`` at offset ``<= q``
+    is the last emitted symbol ``<= k_of_word[q]`` in lane ``j``, found by
+    one gather into the per-lane emission-count cumsum ``ccol`` plus one
+    binary search for its group — O(W log G) per candidate, the same
+    complexity as the numpy oracle's per-way ``searchsorted``, with no
+    per-way offset tables to build.
+
+Oracle-equivalence of the retry rounds: the numpy heuristic retries up to
+``ROUNDS = 8`` windows, each expansion widening by ``2 * window`` a side, so
+round ``r`` covers ``[max(min_q, c - w(1+2r)), min(n_words-1, c + w(1+2r))]``
+— nested intervals.  Evaluating every candidate in the *widest* round once
+and masking by distance therefore reproduces round ``r`` exactly; the
+selected round is the first with any valid candidate, and the oracle's
+"empty round 0 -> give up" break is the ``lo_0 <= hi_0`` guard (later
+rounds are supersets, so only round 0 can be empty first).
+
+Two static knobs make the fast path fast, each with a flagged fallback the
+session handles (DESIGN.md §5):
+
+  * ``expand_rounds`` — 1 compiles round-0-only planning (virtually always
+    sufficient; the window was sized for that), which *flags* any split
+    slot that would have needed expansion instead of choosing wrongly;
+    ``ROUNDS`` compiles the full oracle semantics.
+  * ``words_bucket`` — the stream capacity.  The optimistic tier sizes it
+    at ``~N/2`` words (16-bit words, so overflow means the payload exceeds
+    8 bits/symbol — at which point entropy coding it is pointless, but
+    still legal), and the pipeline reports ``overflow`` instead of
+    truncating; the fallback tier's ``N``-word capacity cannot overflow.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROUNDS = 8          # oracle retry budget (heuristic.plan_split_offsets)
+SCAN_UNROLL = 8     # encode-scan unroll (per-step work is tiny; amortize)
+_I32_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+# ---------------------------------------------------------------------------
+# Encode (scan over groups, W lanes) — moved from core.vectorized
+# ---------------------------------------------------------------------------
+
+def encode_scan(sym_gw: jax.Array, active_gw: jax.Array, f_tab: jax.Array,
+                F_tab: jax.Array, n_bits: int, ways: int, ctx_gw=None,
+                unroll: int = 1):
+    """Group-stepped W-lane interleaved rANS encode (paper Eq. 1+3).
+
+    Returns ``((final u32[W], zero_freq bool), (words u16[G, W],
+    masks bool[G, W], ys u32[G, W]))`` — the per-group emitted word, emit
+    mask, and bounded post-renorm state (Lemma 3.1).  ``zero_freq`` rides
+    in the carry (the frequency gather happens here anyway): True iff any
+    active symbol has zero quantized frequency — the oracle raises; the
+    scan would silently corrupt the stream, so callers must check it.
+    Pure jnp; jit/vmap at the call site.
+    """
+    shift = np.uint32(32 - n_bits)
+    b_bits = np.uint32(16)
+    word_mask = np.uint32(0xFFFF)
+    x0 = jnp.full((ways,), np.uint32(1 << 16), dtype=jnp.uint32)
+
+    def step(carry, inp):
+        x, bad = carry
+        if ctx_gw is None:
+            s, active = inp
+            fs = f_tab[s].astype(jnp.uint32)
+            Fs = F_tab[s].astype(jnp.uint32)
+        else:
+            s, active, c = inp
+            fs = f_tab[c, s].astype(jnp.uint32)
+            Fs = F_tab[c, s].astype(jnp.uint32)
+        bad = bad | jnp.any(active & (fs == 0))
+        renorm = active & ((x >> shift) >= fs)
+        word = (x & word_mask).astype(jnp.uint16)
+        x1 = jnp.where(renorm, x >> b_bits, x)
+        y = x1  # bounded post-renorm state where renorm fired (Lemma 3.1)
+        q = x1 // jnp.maximum(fs, np.uint32(1))
+        r = x1 - q * jnp.maximum(fs, np.uint32(1))
+        enc = (q << np.uint32(n_bits)) + Fs + r
+        x2 = jnp.where(active, enc, x1)
+        return (x2, bad), (word, renorm, y)
+
+    xs = (sym_gw, active_gw) if ctx_gw is None else (sym_gw, active_gw, ctx_gw)
+    return jax.lax.scan(step, (x0, jnp.asarray(False)), xs, unroll=unroll)
+
+
+# The jitted form `core.vectorized.encode_interleaved_fast` calls (kept with
+# its historical output signature: carry and ys unpacked).
+@functools.partial(jax.jit, static_argnames=("n_bits", "ways"))
+def _encode_scan_jit(sym_gw, active_gw, f_tab, F_tab, n_bits, ways,
+                     ctx_gw=None):
+    (final, _bad), (words, masks, ys) = encode_scan(
+        sym_gw, active_gw, f_tab, F_tab, n_bits, ways, ctx_gw=ctx_gw,
+        unroll=SCAN_UNROLL)
+    return final, words, masks, ys
+
+
+# ---------------------------------------------------------------------------
+# Emission layout (the order isomorphism; all cumsum + gather)
+# ---------------------------------------------------------------------------
+
+def emission_layout(masks: jax.Array):
+    """Cumulative structures over the (G, W) emit grid.
+
+    Returns ``(gc i32[G], base i32[G], bits u32[G], lr i32[G, W],
+    ccol_t i32[W, G], n_words i32)``: inclusive/exclusive per-group
+    emission-count cumsums, the per-group lane bitmap (bit j = lane j
+    emitted), exclusive in-group lane ranks, and the per-lane inclusive
+    group cumsum the heuristic searches (transposed so each lane's column
+    is row-contiguous for the binary searches).
+    """
+    G, W = masks.shape
+    m = masks.astype(jnp.int32)
+    # Lane bitmaps only fit uint32 for W <= 32; wider interleaves take the
+    # lane-rank match path in compact_emissions instead.
+    bits = (jnp.sum(
+        jnp.where(masks, jnp.uint32(1) << jnp.arange(W, dtype=jnp.uint32),
+                  jnp.uint32(0)), axis=1)
+        if W <= 32 else jnp.zeros(G, jnp.uint32))
+    cnt_g = m.sum(axis=1)
+    gc = jnp.cumsum(cnt_g)
+    base = gc - cnt_g
+    lr = jnp.cumsum(m, axis=1) - m
+    ccol_t = jnp.cumsum(m.T, axis=1)
+    n_words = gc[-1] if gc.shape[0] else jnp.int32(0)
+    return gc, base, bits, lr, ccol_t, n_words
+
+
+def _select_bit(word: jax.Array, rank: jax.Array) -> jax.Array:
+    """Index of the ``rank``-th (0-based) set bit of each uint32 — a
+    branch-free SWAR select: five popcount-guided half-width descents,
+    all elementwise (no per-query loop)."""
+    b = jnp.zeros(word.shape, jnp.int32)
+    w = word
+    r = rank
+    for width in (16, 8, 4, 2, 1):
+        low = jax.lax.population_count(
+            w & jnp.uint32((1 << width) - 1)).astype(jnp.int32)
+        go = r >= low
+        r = r - jnp.where(go, low, 0)
+        b = b + jnp.where(go, width, 0)
+        w = jnp.where(go, w >> jnp.uint32(width), w)
+    return b
+
+
+def compact_emissions(words, ys, gc, base, bits, lr, masks, n_words,
+                      ways: int, words_bucket: int):
+    """Gather-only stream compaction: the two-level select.
+
+    For each stream offset ``q``: a binary search of ``q+1`` in the
+    G-sized inclusive group cumsum picks the emitting group (the table is
+    KBs — cache-resident, unlike a search over the word array), then a
+    SWAR bit-select on the group's lane bitmap picks the lane (W <= 32;
+    wider interleaves match the exclusive lane rank directly).  Returns
+    padded ``(stream u32, k_of_word i32, y_of_word u32)`` of length
+    ``words_bucket`` (``k_of_word`` tail = int32 max so it stays sorted)
+    plus the overflow flag (``n_words > words_bucket`` — the optimistic
+    capacity tier lost words; the caller must re-run the full tier).
+    """
+    G = gc.shape[0]
+    q = jnp.arange(words_bucket, dtype=jnp.int32)
+    g_q = jnp.clip(jnp.searchsorted(gc, q + 1, side="left"), 0,
+                   G - 1).astype(jnp.int32)
+    r = q - base[g_q]
+    if ways <= 32:
+        j_q = _select_bit(bits[g_q], jnp.clip(r, 0, ways - 1))
+    else:
+        hit = (lr[g_q] == r[:, None]) & masks[g_q]   # exactly one lane
+        j_q = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    flat = g_q * np.int32(ways) + j_q
+    valid = q < n_words
+    stream = jnp.where(valid, words.reshape(-1)[flat].astype(jnp.uint32),
+                       jnp.uint32(0))
+    k_of_word = jnp.where(valid, flat, _I32_MAX)
+    y_of_word = jnp.where(valid, ys.reshape(-1)[flat], jnp.uint32(0))
+    return stream, k_of_word, y_of_word, n_words > words_bucket
+
+
+# ---------------------------------------------------------------------------
+# Definition-4.1 split planning (greedy scan, symbol-space backward scans)
+# ---------------------------------------------------------------------------
+
+def plan_split_scan(k_of_word, ys, base, lr, masks, ccol_t, n_words,
+                    n_symbols, n_splits, *, ways: int, splits_bucket: int,
+                    window: int, expand_rounds: int):
+    """Greedy Def-4.1 split selection, bit-exact vs the numpy oracle.
+
+    Returns per-slot ``(found bool[E], q i32[E], k i32[E, W], y u32[E, W])``
+    for ``E = splits_bucket - 1`` slots plus ``needs_expansion`` — True iff
+    some slot found no round-0 candidate while wider rounds remained
+    unevaluated (only possible when ``expand_rounds < ROUNDS``; the caller
+    re-runs the full-rounds executable).  All invariants mirror
+    ``heuristic.plan_split_offsets``; see the module docstring for the
+    windowed-retry equivalence argument and the symbol-space backward scan.
+    """
+    G, W = masks.shape
+    radius = window * (1 + 2 * (expand_rounds - 1))
+    deltas = jnp.arange(-radius, radius + 1, dtype=jnp.int32)
+    cap = k_of_word.shape[0]
+    lanes = jnp.arange(W, dtype=jnp.int32)
+
+    def backward_scan(qs):
+        """k/y of each way's last emission at offset <= q, per candidate:
+        the last emitted symbol <= k_of_word[q] in each lane."""
+        k_q = k_of_word[jnp.clip(qs, 0, cap - 1)]       # (C,)
+        t = (k_q[None, :] - lanes[:, None]) // np.int32(W)   # (W, C) floor
+        cnt = jnp.where(t >= 0,
+                        ccol_t[lanes[:, None],
+                               jnp.clip(t, 0, G - 1)], 0)
+        ok = cnt >= 1
+        g2 = jax.vmap(lambda col, c: jnp.searchsorted(col, c, side="left"))(
+            ccol_t, cnt).astype(jnp.int32)              # group of cnt-th emit
+        g2c = jnp.clip(g2, 0, G - 1)
+        k = jnp.where(ok, g2c * np.int32(W) + lanes[:, None], np.int32(-1))
+        y = jnp.where(ok, ys[g2c, lanes[:, None]], jnp.uint32(0))
+        return k, y, ok.all(axis=0)
+
+    def offset_of_symbol(k):
+        """#emissions at symbols <= k == offset of first emission > k."""
+        kc = jnp.clip(k, 0, G * W - 1)
+        g, j = kc // np.int32(W), kc % np.int32(W)
+        return base[g] + lr[g, j] + masks[g, j].astype(jnp.int32)
+
+    def step(carry, m):
+        c_prev, min_q, done = carry
+        active = (~done) & (m < n_splits - 1)
+        # T = ceil(N_remaining / M_remaining), recomputed per slot (oracle).
+        denom = jnp.maximum(n_splits - m, 1)
+        T = (n_symbols - c_prev + denom - 1) // denom
+        target = c_prev + T
+        over = target >= n_symbols
+        center = offset_of_symbol(target - 1)   # == searchsorted(k_of, target)
+        qs = center + deltas
+        in_bounds = (qs >= min_q) & (qs <= n_words - 1)
+        k_cand, y_cand, covered = backward_scan(qs)
+        c_cand = k_cand.min(axis=0)
+        a_cand = k_cand.max(axis=0)
+        valid = in_bounds & covered & (c_cand > c_prev)
+        t = a_cand - c_prev + 1
+        kept = c_cand - c_prev
+        h = jnp.abs(t - T) + jnp.abs(kept - T)
+        dist = jnp.abs(qs - center)
+        round_any = jnp.stack([
+            jnp.any(valid & (dist <= window * (1 + 2 * r)))
+            for r in range(expand_rounds)])
+        r_star = jnp.argmax(round_any)                   # first True (or 0)
+        # Oracle break: an empty round-0 window aborts before expanding.
+        nonempty0 = (jnp.maximum(min_q, center - window)
+                     <= jnp.minimum(n_words - 1, center + window))
+        found = round_any[expand_rounds - 1] & nonempty0
+        sel_mask = valid & (dist <= window * (1 + 2 * r_star))
+        best = jnp.argmin(jnp.where(sel_mask, h, _I32_MAX))
+        emit = active & (~over) & found
+        # Round 0 failed but wider rounds exist that this executable did
+        # not evaluate: flag for the full-rounds fallback.
+        expand = active & (~over) & nonempty0 & (~round_any[0]) \
+            if expand_rounds < ROUNDS else jnp.asarray(False)
+        c_next = jnp.where(emit, c_cand[best], c_prev)
+        min_q_next = jnp.where(emit, qs[best] + 1, min_q)
+        done_next = done | (active & (over | ~found)) | expand
+        out = (emit, jnp.where(emit, qs[best], -1),
+               k_cand[:, best], y_cand[:, best], expand)
+        return (c_next, min_q_next, done_next), out
+
+    done0 = (n_splits <= 1) | (n_words == 0) | (n_symbols <= 0)
+    init = (jnp.int32(0), jnp.int32(0), done0)
+    _, (found, q, k, y, expand) = jax.lax.scan(
+        step, init, jnp.arange(splits_bucket - 1, dtype=jnp.int32),
+        unroll=min(4, splits_bucket - 1) or 1)
+    return found, q, k, y, jnp.any(expand)
+
+
+# ---------------------------------------------------------------------------
+# The fused pipeline: symbols -> stream + log + split metadata, one jit
+# ---------------------------------------------------------------------------
+
+def ingest_pipeline(sym_gw, active_gw, f_tab, F_tab, n_symbols, n_splits,
+                    ctx_gw=None, *, n_bits: int, ways: int, words_bucket: int,
+                    splits_bucket: int, window: int, expand_rounds: int):
+    """symbols -> (stream, emission log, final states, split plan) on device.
+
+    ``n_symbols``/``n_splits`` are traced int32 scalars so one bucketed
+    executable serves every content size and split count within its bucket.
+    Returns a dict of device arrays; only the metadata entries (split
+    slots, final states, scalars, flags) need to visit the host.
+    """
+    (final, zero_freq), (words, masks, ys) = encode_scan(
+        sym_gw, active_gw, f_tab, F_tab, n_bits, ways, ctx_gw=ctx_gw,
+        unroll=SCAN_UNROLL)
+    gc, base, bits, lr, ccol_t, n_words = emission_layout(masks)
+    stream, k_of_word, y_of_word, overflow = compact_emissions(
+        words, ys, gc, base, bits, lr, masks, n_words, ways, words_bucket)
+    found, q, k, y, needs_expansion = plan_split_scan(
+        k_of_word, ys, base, lr, masks, ccol_t, n_words, n_symbols, n_splits,
+        ways=ways, splits_bucket=splits_bucket, window=window,
+        expand_rounds=expand_rounds)
+    return {
+        "stream": stream, "k_of_word": k_of_word, "y_of_word": y_of_word,
+        "final_states": final, "n_words": n_words,
+        "split_found": found, "split_q": q, "split_k": k, "split_y": y,
+        "needs_expansion": needs_expansion, "overflow": overflow,
+        "zero_freq": zero_freq,
+    }

@@ -1,0 +1,86 @@
+"""EncodePlan IR: one ingest request, prepared once into executor-ready form.
+
+Mirrors the decode engine's :class:`~repro.core.engine.plan.DecodePlan`
+(DESIGN.md §4b/§5): a plan captures everything the bucketed executable call
+needs, so the session's cache key can guarantee that two plans with equal
+keys are servable by one AOT executable.
+
+  * ``key``      — executable-cache key: impl tag + every bucketed dim +
+                   the adaptive/static layout + heuristic window.  The two
+                   per-executable *tier* knobs — ``expand_rounds`` and the
+                   stream capacity — are deliberately NOT in the key: the
+                   session appends them, because one plan runs under the
+                   fast tier (round-0 heuristic, ~N/2-word capacity) and
+                   only re-runs under the full tier when flagged;
+  * ``args``     — positional device argument tuple, already padded to the
+                   bucketed shapes (symbol groups, active mask, resident
+                   f/F tables, traced ``n_symbols``/``n_splits`` scalars,
+                   optional context ids).  Capacity is NOT an arg shape —
+                   both tiers consume identical args;
+  * ``statics``  — static lowering kwargs shared by both tiers (the tier
+                   knobs are appended at lower time);
+  * ``n_symbols``/``n_splits`` — the real request values (the traced
+                   scalars in ``args`` carry them to the device; these stay
+                   for host-side bookkeeping).
+
+Bucketing policy (DESIGN.md §4): the group count — scan steps, compute-
+dominant — uses :func:`~repro.core.engine.plan.work_bucket`; stream
+capacity and split slots are memory-dominant and use
+:func:`~repro.core.engine.plan.pow2_bucket`.  The fast tier's capacity
+covers payloads up to 8 bits/symbol (16-bit words: ``words <= N/2``); the
+pipeline flags overflow instead of truncating, and the full tier's
+``N``-word capacity is a hard bound (every symbol emits at most one word).
+
+Padding is inert end to end: padded symbol groups carry ``active = False``
+(no state change, no emission), padded split slots run with
+``m >= n_splits - 1`` (never emit), and the stream bucket's tail is zeros
+that no decoder ever indexes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..engine.plan import pow2_bucket, work_bucket
+
+__all__ = ["EncodePlan", "pow2_bucket", "work_bucket",
+           "stream_capacity_buckets", "splits_slot_bucket"]
+
+
+def stream_capacity_buckets(n_symbols: int) -> tuple[int, int]:
+    """(fast, full) device stream capacities.  Fast covers <= 8 bits/symbol
+    (overflow is flagged, never truncated); full covers the <= 1 word per
+    symbol hard bound.  Floor 1024 matches the decode engine's stream
+    bucket floor, so ingested streams land in the same residency buckets
+    registered ones do."""
+    full = pow2_bucket(n_symbols, 1024)
+    fast = pow2_bucket(-(-n_symbols // 2), 1024)
+    return fast, full
+
+
+def splits_slot_bucket(n_splits: int) -> int:
+    """Split-slot bucket (the heuristic scan runs ``bucket - 1`` slots with
+    inert tail slots), floor 2 so ``n_splits = 1`` still lowers."""
+    return pow2_bucket(n_splits, 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncodePlan:
+    """A prepared ingest request (see module docstring).
+
+    ``key`` is hashable; ``args``/``statics`` are consumed positionally by
+    the executor that built the plan — plans are not portable across
+    executors (the key's leading impl tag enforces that in the cache).
+    ``words_bucket``/``words_bucket_full`` are the fast/full capacity
+    tiers; which one produced a result decides the resident stream's
+    bucket.
+    """
+
+    key: tuple
+    args: tuple
+    statics: dict
+    n_symbols: int
+    n_splits: int
+    words_bucket: int
+    words_bucket_full: int
+    batch: int = 0   # 0 = single content; > 0 = vmapped content count

@@ -1,0 +1,259 @@
+"""EncoderSession: a thin plan -> executable cache over an ingest executor.
+
+Mirror of :class:`~repro.core.engine.session.DecoderSession` (DESIGN.md
+§5).  The session owns exactly three things:
+
+  * device-resident frequency tables, uploaded once at construction
+    (static ``[A]`` or adaptive ``[C, A]``);
+  * the executable cache — ``(plan.key, tier) -> compiled`` — so a bucket
+    hit physically cannot re-trace and ``stats.compiles`` counts builds
+    exactly.  Each plan key owns up to TWO executables: the fast tier
+    (round-0 heuristic, ~N/2-word stream capacity) and the full tier
+    (all retry rounds, N-word capacity), compiled lazily only when a
+    content trips a fast-tier flag — heuristic window expansion or
+    capacity overflow (``stats.fallbacks``);
+  * request accounting (:class:`EncodeStats`).
+
+``ingest`` is the device-resident path: symbols -> (DeviceStream,
+RecoilPlan, final states) with only split metadata and scalars visiting the
+host — the stream feeds :meth:`repro.runtime.serve.DecodeService.register`
+directly.  ``encode`` materializes a host :class:`EncodedStream` (the
+oracle-compatible object, used by the parity tests and host tooling).
+``ingest_batch`` runs B contents through one vmapped executable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..engine.plan import DeviceStream
+from ..interleaved import EncodedStream
+from ..recoil import RecoilPlan, SplitPoint
+from .executors import make_encode_executor
+from .ops import ROUNDS
+from .plan import EncodePlan
+
+# Device-side H and index arithmetic is int32; 2*N must not wrap.
+MAX_SYMBOLS = 1 << 30
+
+
+@dataclasses.dataclass
+class EncodeStats:
+    compiles: int = 0      # executables built (bucket misses)
+    cache_hits: int = 0    # ingests served by an existing executable
+    encodes: int = 0       # pipeline dispatches (batch counts as one)
+    fallbacks: int = 0     # full-tier re-runs (round-0 miss / overflow)
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestResult:
+    """One ingested content: everything ``DecodeService.register`` needs.
+
+    ``stream.words`` is the device-resident padded word array (``host`` is
+    None — the bitstream never visited the host); ``plan`` carries the
+    Definition-4.1 split metadata, already validated.
+    """
+
+    stream: DeviceStream
+    plan: RecoilPlan
+    final_states: np.ndarray   # uint32[W]
+    n_words: int
+
+
+class EncoderSession:
+    """Device-resident Recoil ingest engine with a bucketed executable cache.
+
+    ``model`` is a :class:`~repro.core.rans.StaticModel` or a
+    :class:`~repro.core.adaptive.ContextModel` (adaptive, index-keyed
+    distributions; pass the per-symbol ``ctx`` map to each request, or rely
+    on ``model.ctx`` when the lengths match).  ``window`` is the Def-4.1
+    candidate half-window (must match the oracle's to stay bit-exact).
+    ``fast_rounds=False`` disables the round-0 fast path and always runs
+    the full-rounds executable (mainly for tests).
+    """
+
+    def __init__(self, model, *, impl: str = "jnp", window: int = 96,
+                 fast_rounds: bool = True):
+        import jax.numpy as jnp
+        self.model = model
+        self.adaptive = np.asarray(model.f).ndim == 2
+        self.params = model.params
+        f = np.asarray(model.f).astype(np.int32)
+        F = np.asarray(model.F).astype(np.int32)
+        self.alphabet = f.shape[-1]
+        self.executor = make_encode_executor(
+            impl, jnp.asarray(f), jnp.asarray(F), n_bits=self.params.n_bits,
+            ways=self.params.ways, adaptive=self.adaptive, window=window)
+        self.fast_rounds = fast_rounds
+        self._exec: dict[tuple, object] = {}
+        self.stats = EncodeStats()
+
+    # ------------------------------------------------------------------
+    # Prepare / execute (public, mirrors DecoderSession)
+    # ------------------------------------------------------------------
+
+    def prepare(self, symbols, n_splits: int = 1, ctx=None) -> EncodePlan:
+        """Host-side request preparation only (no dispatch): bucket, pad,
+        assemble args.  The returned plan may be cached and re-executed."""
+        self._check_symbols(symbols)
+        if n_splits < 1:
+            raise ValueError("need at least one decoder thread")
+        return self.executor.plan(symbols, n_splits, self._ctx_for(symbols,
+                                                                   ctx))
+
+    def prepare_batch(self, contents, n_splits, ctxs=None) -> EncodePlan:
+        for c in contents:
+            self._check_symbols(c)
+        if ctxs is None and self.adaptive:
+            ctxs = [self._ctx_for(c, None) for c in contents]
+        return self.executor.plan_batch(contents, n_splits, ctxs)
+
+    def execute(self, plan: EncodePlan) -> tuple[dict, int]:
+        """Run a prepared plan: compile on bucket miss, else reuse.  Returns
+        ``(outputs, words_bucket)`` — the capacity tier that produced the
+        outputs.  When the fast tier flags a split slot it could not settle
+        (round-0 heuristic miss) or a stream-capacity overflow, the plan
+        re-runs under the lazily compiled full tier (bit-exactness over
+        speed; correctness never depends on the flags)."""
+        self.stats.encodes += 1
+        fast = self.fast_rounds and plan.words_bucket < plan.words_bucket_full
+        rounds = 1 if self.fast_rounds else ROUNDS
+        cap = plan.words_bucket if fast else plan.words_bucket_full
+        out = self.executor.run(self._executable(plan, rounds, cap), plan)
+        flagged = bool(np.any(np.asarray(out["overflow"]))) or (
+            rounds < ROUNDS
+            and bool(np.any(np.asarray(out["needs_expansion"]))))
+        if flagged:
+            self.stats.fallbacks += 1
+            cap = plan.words_bucket_full
+            out = self.executor.run(
+                self._executable(plan, ROUNDS, cap), plan)
+        return out, cap
+
+    def _executable(self, plan: EncodePlan, rounds: int, words_bucket: int):
+        key = plan.key + (rounds, words_bucket)
+        exe = self._exec.get(key)
+        if exe is None:
+            exe = self.executor.lower(plan, expand_rounds=rounds,
+                                      words_bucket=words_bucket)
+            self._exec[key] = exe
+            self.stats.compiles += 1
+        else:
+            self.stats.cache_hits += 1
+        return exe
+
+    # ------------------------------------------------------------------
+    # Ingest (device-resident) / encode (host materialization)
+    # ------------------------------------------------------------------
+
+    def ingest(self, symbols, n_splits: int, ctx=None) -> IngestResult:
+        """symbols -> (device stream, validated RecoilPlan, final states).
+
+        The stream never visits the host; the returned handle plugs into
+        ``DecodeService.register`` / any jnp-family decode executor."""
+        plan = self.prepare(symbols, n_splits, ctx)
+        out, cap = self.execute(plan)
+        return self._materialize(out, plan, plan.n_symbols, cap,
+                                 symbols=symbols)
+
+    def ingest_batch(self, contents, n_splits, ctxs=None) -> list[IngestResult]:
+        """B contents through ONE vmapped dispatch; per-content results are
+        device slices of the stacked outputs."""
+        plan = self.prepare_batch(contents, n_splits, ctxs)
+        out, cap = self.execute(plan)
+        return [
+            self._materialize({k: v[i] for k, v in out.items()}, plan,
+                              int(np.asarray(contents[i]).size), cap,
+                              symbols=contents[i])
+            for i in range(plan.batch)]
+
+    def encode(self, symbols, ctx=None) -> EncodedStream:
+        """Host :class:`EncodedStream` (stream + emission log), bit-exact vs
+        ``interleaved.encode_interleaved`` — the parity surface."""
+        plan = self.prepare(symbols, 1, ctx)
+        out, _cap = self.execute(plan)
+        self._check_flags(out, symbols)
+        n_words = int(out["n_words"])
+        return EncodedStream(
+            stream=np.asarray(out["stream"][:n_words]).astype(np.uint16),
+            final_states=np.asarray(out["final_states"]),
+            n_symbols=plan.n_symbols, params=self.params,
+            k_of_word=np.asarray(out["k_of_word"][:n_words]).astype(np.int64),
+            y_of_word=np.asarray(out["y_of_word"][:n_words]))
+
+    # ------------------------------------------------------------------
+    # Internals
+    # ------------------------------------------------------------------
+
+    def _ctx_for(self, symbols, ctx):
+        if not self.adaptive:
+            if ctx is not None:
+                raise ValueError("ctx map given but the model is static")
+            return None
+        if ctx is not None:
+            return ctx
+        n = int(np.asarray(symbols).size)
+        model_ctx = getattr(self.model, "ctx", None)
+        if model_ctx is not None and len(model_ctx) >= n:
+            return np.asarray(model_ctx)[:n]
+        raise ValueError(
+            f"adaptive ingest of {n} symbols needs a ctx map (model.ctx "
+            f"covers {0 if model_ctx is None else len(model_ctx)})")
+
+    def _check_symbols(self, symbols) -> None:
+        syms = np.asarray(symbols)
+        if syms.size >= MAX_SYMBOLS:
+            raise ValueError(
+                f"n_symbols={syms.size} exceeds the int32 device planning "
+                f"range (< {MAX_SYMBOLS})")
+        if syms.size and (int(syms.min()) < 0
+                          or int(syms.max()) >= self.alphabet):
+            raise ValueError(
+                f"symbols outside the model alphabet [0, {self.alphabet}): "
+                f"min {int(syms.min())}, max {int(syms.max())}")
+
+    def _check_flags(self, out, symbols) -> None:
+        if bool(np.asarray(out["zero_freq"]).any()):
+            detail = ""
+            if symbols is not None:
+                syms = np.unique(np.asarray(symbols, np.int64))
+                f = np.asarray(self.model.f)
+                bad = (syms[np.asarray(f[..., syms].min(axis=0) == 0).ravel()]
+                       if f.ndim == 2 else syms[f[syms] == 0])
+                detail = f" (symbols {bad[:8].tolist()})"
+            raise ValueError(
+                "content uses symbols with zero quantized frequency in the "
+                f"model{detail} — it cannot be encoded; rebuild the model "
+                "from counts covering these symbols")
+
+    def _materialize(self, out, plan: EncodePlan, n_symbols: int,
+                     words_bucket: int, symbols=None) -> IngestResult:
+        self._check_flags(out, symbols)
+        W = self.params.ways
+        n_words = int(out["n_words"])
+        found = np.asarray(out["split_found"])
+        q = np.asarray(out["split_q"])
+        k = np.asarray(out["split_k"]).astype(np.int64)
+        y = np.asarray(out["split_y"]).astype(np.uint32)
+        points = tuple(
+            SplitPoint(offset=int(q[m]), k=k[m], y=y[m])
+            for m in np.flatnonzero(found))
+        rplan = RecoilPlan(points=points, n_symbols=n_symbols,
+                           n_words=n_words, ways=W)
+        rplan.validate(self.params.lower_bound)
+        # Slice the capacity tier down to the residency bucket uploaded
+        # streams get (pow2 of the real word count, floor 1024), so
+        # ingested and registered copies of like-sized contents share
+        # decode executables and the padding tail stays bounded.
+        from ..engine.plan import pow2_bucket
+        bucket = min(words_bucket, pow2_bucket(n_words, 1024))
+        ds = DeviceStream(words=out["stream"][:bucket], host=None,
+                          n_words=n_words, bucket=bucket)
+        return IngestResult(stream=ds, plan=rplan,
+                            final_states=np.asarray(out["final_states"]),
+                            n_words=n_words)

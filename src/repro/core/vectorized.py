@@ -32,39 +32,12 @@ from .rans import RansParams, StaticModel
 
 # ---------------------------------------------------------------------------
 # Encode (scan over groups, W lanes; host-side stream compaction)
+#
+# The scan itself lives in the ingest engine (`core.encode.ops.encode_scan`
+# — the device pipeline builds stream + split metadata without ever leaving
+# the device); this host wrapper remains the drop-in oracle-compatible
+# entry point that materializes an `EncodedStream` in numpy.
 # ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("n_bits", "ways"))
-def _encode_scan(sym_gw: jax.Array, active_gw: jax.Array, f_tab: jax.Array,
-                 F_tab: jax.Array, n_bits: int, ways: int, ctx_gw=None):
-    shift = np.uint32(32 - n_bits)
-    b_bits = np.uint32(16)
-    word_mask = np.uint32(0xFFFF)
-    x0 = jnp.full((ways,), np.uint32(1 << 16), dtype=jnp.uint32)
-
-    def step(x, inp):
-        if ctx_gw is None:
-            s, active = inp
-            fs = f_tab[s].astype(jnp.uint32)
-            Fs = F_tab[s].astype(jnp.uint32)
-        else:
-            s, active, c = inp
-            fs = f_tab[c, s].astype(jnp.uint32)
-            Fs = F_tab[c, s].astype(jnp.uint32)
-        renorm = active & ((x >> shift) >= fs)
-        word = (x & word_mask).astype(jnp.uint16)
-        x1 = jnp.where(renorm, x >> b_bits, x)
-        y = x1  # bounded post-renorm state where renorm fired (Lemma 3.1)
-        q = x1 // jnp.maximum(fs, np.uint32(1))
-        r = x1 - q * jnp.maximum(fs, np.uint32(1))
-        enc = (q << np.uint32(n_bits)) + Fs + r
-        x2 = jnp.where(active, enc, x1)
-        return x2, (word, renorm, y)
-
-    xs = (sym_gw, active_gw) if ctx_gw is None else (sym_gw, active_gw, ctx_gw)
-    final, (words, masks, ys) = jax.lax.scan(step, x0, xs)
-    return final, words, masks, ys
-
 
 def encode_interleaved_fast(symbols: np.ndarray, model: StaticModel,
                             ctx=None, ctx_f=None, ctx_F=None) -> EncodedStream:
@@ -73,6 +46,7 @@ def encode_interleaved_fast(symbols: np.ndarray, model: StaticModel,
     With (ctx, ctx_f, ctx_F) provided, encodes with per-index distributions
     (adaptive coding) — drop-in for ``adaptive.encode_interleaved_adaptive``.
     """
+    from .encode.ops import _encode_scan_jit
     p = model.params if model is not None else None
     if p is None:
         raise ValueError("model required (pass a StaticModel; adaptive uses "
@@ -92,7 +66,7 @@ def encode_interleaved_fast(symbols: np.ndarray, model: StaticModel,
         f_tab, F_tab = jnp.asarray(ctx_f), jnp.asarray(ctx_F)
         ctx_gw = jnp.asarray(np.concatenate(
             [np.asarray(ctx, np.int32), np.zeros(pad, np.int32)]).reshape(G, W))
-    final, words, masks, ys = _encode_scan(
+    final, words, masks, ys = _encode_scan_jit(
         jnp.asarray(sym_gw), jnp.asarray(active), f_tab, F_tab,
         p.n_bits, W, ctx_gw=ctx_gw)
     words = np.asarray(words).reshape(-1)

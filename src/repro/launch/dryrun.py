@@ -228,7 +228,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh_name = "multi" if multi_pod else "single"
     if not cfg.runs_shape(shape_name):
         row = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-               "status": "SKIP (full attention at 500k; DESIGN.md §5)"}
+               "status": "SKIP (full attention at 500k; DESIGN.md §6)"}
         os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
         with open(os.path.join(out_dir, mesh_name,
                                f"{arch}__{shape_name}.json"), "w") as f:

@@ -1,6 +1,6 @@
 """Unified LM builder covering all 10 assigned architecture families.
 
-Design notes (DESIGN.md §5-6):
+Design notes (DESIGN.md §6-7):
   * pure-functional: params are nested dicts of stacked per-layer arrays,
     the layer stack is a single ``lax.scan`` (HLO size stays flat in depth;
     remat policy per config wraps the scanned body);

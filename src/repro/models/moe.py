@@ -29,7 +29,7 @@ def moe_ffn(x, w_router, w_gate, w_in, w_out, *, top_k: int,
     ``dropless=True`` sets C = T (no token ever dropped) — used by the
     single-token decode path where T = batch is small; full-sequence paths
     keep capacity routing, whose batch-coupled drops are the standard
-    GShard/Switch approximation (noted in DESIGN.md §5).
+    GShard/Switch approximation (noted in DESIGN.md §6).
     """
     B, S, d = x.shape
     E = w_gate.shape[0]

@@ -6,8 +6,19 @@ decoder has; on a device mesh that parallelism is the mesh itself.  The
 across every device of a mesh with ``shard_map``:
 
   * split arrays (``k``/``y``/``x0``/... — leading dim = bucketed split
-    count) arrive row-sharded over the product of the mesh axes; the stream
-    and slot tables arrive replicated;
+    count) arrive row-sharded over the product of the mesh axes; the slot
+    tables arrive replicated;
+  * the stream arrives **slab-thinned**: shard ``s`` receives only the
+    window ``[lo_s, hi_s]`` of the stream its rows can read.  A row's walk
+    consumes at most one word per walked index, descending from its ``q0``,
+    so its reads live in ``[q0 - (start - stop), q0]``; the shard window is
+    the union over the shard's non-inert rows, padded to a common pow2 slab
+    bucket, gathered ON DEVICE from the resident stream (works for fused
+    microbatch streams that never had host words), and each row's ``q0`` is
+    rebased to its shard's slab.  This replaces the full-stream replication
+    the first sharded tier shipped with: per-device stream bytes drop from
+    ``stream_bucket`` to ``slab_bucket`` (~``1/n_shards`` for evenly
+    planned splits, plus pow2 rounding);
   * each device runs the SAME vmapped walk the single-device jnp executor
     runs (``_walk_batch_impl``) over its local rows, scattering its kept
     symbols into a full-size local output initialized to -1;
@@ -21,9 +32,10 @@ across every device of a mesh with ``shard_map``:
 
 Bucketing: the split-row bucket is ``n_shards * work_bucket(ceil(S /
 n_shards))`` so every shard gets the same inert-padded row count and any
-split count within the per-shard bucket reuses the executable.  One
-bucketed AOT executable per (mesh, bucket) — the session's ``EngineStats``
-counts compiles exactly as for the single-device backends.
+split count within the per-shard bucket reuses the executable; the slab
+bucket (pow2, floor 1024) joins the cache key.  One bucketed AOT
+executable per (mesh, bucket) — the session's ``EngineStats`` counts
+compiles exactly as for the single-device backends.
 
 Inputs are ``device_put`` with explicit NamedShardings at plan time, so the
 AOT executable's expected shardings always match and repeat traffic moves
@@ -41,7 +53,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.engine.executors import JnpExecutor
-from repro.core.engine.plan import DecodePlan, work_bucket
+from repro.core.engine.plan import (DecodePlan, SPLIT_FIELDS,
+                                    pad_split_arrays, pow2_bucket,
+                                    work_bucket)
 from repro.core.vectorized import _walk_batch_impl
 
 
@@ -66,12 +80,15 @@ class ShardedExecutor(JnpExecutor):
         self.n_shards = int(math.prod(mesh.shape[a] for a in self.axes))
         self._repl = NamedSharding(mesh, P())
         self._rows = NamedSharding(mesh, P(self.axes))
+        self._slab_rows = NamedSharding(mesh, P(self.axes, None))
         # Slot tables replicate across the mesh once, at construction.
         self.luts = tuple(None if l is None else jax.device_put(l, self._repl)
                           for l in luts)
 
-    # Streams upload replicated over the mesh (every shard reads the full
-    # stream; per-shard slab thinning is the Pallas path's job).
+    # Streams upload replicated over the mesh; plan() thins them into
+    # per-shard slabs with an on-device gather, so the replicated copy is
+    # only the gather source, and repeat traffic (memoized plans) holds
+    # just the row-sharded slabs.
     def _put(self, padded: np.ndarray) -> jax.Array:
         return jax.device_put(padded, self._repl)
 
@@ -81,33 +98,66 @@ class ShardedExecutor(JnpExecutor):
         return self.n_shards * work_bucket(-(-S // self.n_shards))
 
     def plan(self, batch, ds, n_symbols: int) -> DecodePlan:
-        base = super().plan(batch, ds, n_symbols)
-        stream, sym_lut, f_lut, F_lut, *arrs = base.args
+        ds = self.resident(ds)
         # Fused streams built by the microbatcher (device-side concatenate)
-        # may come back without the explicit replicated sharding the AOT
-        # executable expects; re-pin (no-op for resident handles).
-        stream = jax.device_put(stream, self._repl)
-        arrs = tuple(jax.device_put(a, self._rows) for a in arrs)
-        key = (self.impl, self.n_shards, self.axes) + base.key[1:]
-        return DecodePlan(key=key,
-                          args=(stream, sym_lut, f_lut, F_lut, *arrs),
-                          statics=base.statics, n_symbols=base.n_symbols,
-                          out_bucket=base.out_bucket)
+        # may come back without an explicit sharding; re-pin replicated so
+        # the slab gather below reads a mesh-consistent source.
+        stream = jax.device_put(ds.words, self._repl)
+        p = self.model.params
+        W = batch.ways
+        S = batch.k.shape[0]
+        s_b = self._split_bucket(S)
+        steps_b = work_bucket(batch.n_steps)
+        out_b = pow2_bucket(n_symbols)
+        arrs = pad_split_arrays(batch, s_b)
+
+        # --- per-shard read windows (host arithmetic on the padded layout;
+        # inert padding rows carry start = -1 and are excluded) ---
+        q0 = np.zeros(s_b, np.int64)
+        start = np.full(s_b, -1, np.int64)
+        stop = np.zeros(s_b, np.int64)
+        q0[:S] = batch.q0
+        start[:S] = batch.start
+        stop[:S] = batch.stop
+        rows_per = s_b // self.n_shards
+        act = (start >= 0).reshape(self.n_shards, rows_per)
+        row_lo = (q0 - (start - stop)).reshape(self.n_shards, rows_per)
+        row_hi = q0.reshape(self.n_shards, rows_per)
+        lo_s = np.where(act, row_lo, np.int64(1) << 60).min(axis=1)
+        hi_s = np.where(act, row_hi, np.int64(-1)).max(axis=1)
+        lo_s = np.clip(np.minimum(lo_s, hi_s + 1), 0, None)  # empty -> len 0
+        slab_len = int(np.maximum(hi_s - lo_s + 1, 0).max()) if S else 1
+        slab_b = pow2_bucket(max(slab_len, 1), 1024)
+        gidx = jnp.asarray(lo_s.astype(np.int32))[:, None] \
+            + jnp.arange(slab_b, dtype=jnp.int32)
+        slabs = jax.device_put(
+            stream[jnp.clip(gidx, 0, ds.bucket - 1)], self._slab_rows)
+        arrs["q0"] = jnp.asarray(
+            (q0 - np.repeat(lo_s, rows_per)).astype(np.int32))
+
+        key = (self.impl, self.n_shards, self.axes, self.packed_lut,
+               p.n_bits, W, s_b, steps_b, slab_b, out_b)
+        args = (slabs, *self.luts,
+                *(jax.device_put(arrs[f], self._rows) for f in SPLIT_FIELDS))
+        statics = dict(n_bits=p.n_bits, ways=W, n_steps=steps_b,
+                       n_symbols=out_b)
+        return DecodePlan(key=key, args=args, statics=statics,
+                          n_symbols=n_symbols, out_bucket=out_b)
 
     def lower(self, plan: DecodePlan):
         st = plan.statics
         axes = self.axes
 
-        def local(stream, sym_lut, f_lut, F_lut, *splits):
+        def local(slab, sym_lut, f_lut, F_lut, *splits):
             out, _qf = _walk_batch_impl(
-                stream, sym_lut, f_lut, F_lut, *splits,
+                slab[0], sym_lut, f_lut, F_lut, *splits,
                 n_bits=st["n_bits"], ways=st["ways"], n_steps=st["n_steps"],
                 n_symbols=st["n_symbols"], ctx_of_index=None)
             return jax.lax.pmax(out, axes)
 
         sharded = shard_map(
             local, mesh=self.mesh,
-            in_specs=(P(), P(), P(), P()) + (P(axes),) * 10,
+            in_specs=(P(axes, None), P(), P(), P()) + (P(axes),) * 10,
             out_specs=P(), check_rep=False)
         return jax.jit(sharded).lower(*plan.args).compile()
 

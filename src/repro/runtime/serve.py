@@ -9,7 +9,12 @@ greedy or temperature sampling, straggler-safe timing hooks.
 once (stream device-resident), split metadata thinned per request to the
 client's parallelism, and every decode dispatched through a persistent
 :class:`repro.core.engine.DecoderSession` so steady-state traffic never
-recompiles (DESIGN.md §4).  Two request paths:
+recompiles (DESIGN.md §4).  Content enters either pre-encoded
+(``register``, validated against the service model before it can serve)
+or as raw symbols (``ingest``/``ingest_batch`` — the
+:class:`repro.core.encode.EncoderSession` ingest engine encodes and
+split-plans on device and the stream feeds registration without ever
+visiting the host, DESIGN.md §5).  Two request paths:
 
   * ``decode(name, n_threads)`` — immediate single dispatch.  The prepared
     :class:`~repro.core.engine.DecodePlan` is memoized per
@@ -41,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.encode import EncoderSession
 from repro.core.engine import (DecodePlan, DecoderSession, DeviceStream,
                                concat_walk_batches, pow2_bucket)
 from repro.core.rans import StaticModel
@@ -118,6 +124,9 @@ class ServiceStats:
     coalesced_requests: int
     fused_dispatches: int
     flushes: int
+    ingests: int = 0           # contents registered through the encode engine
+    encode_compiles: int = 0   # ingest-engine executable builds
+    encode_fallbacks: int = 0  # full-rounds heuristic re-runs
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -167,6 +176,7 @@ class DecodeService:
         self.session = DecoderSession(model, impl=impl, **session_kw)
         self.microbatch = int(microbatch)
         self.max_delay_ms = float(max_delay_ms)
+        self._encoder: EncoderSession | None = None   # built on first ingest
         self._contents: dict[str, _Content] = {}
         # (name, n_threads) -> prepared request, two granularities: the
         # thinned WalkBatch (fusable) and the full DecodePlan (single path).
@@ -183,22 +193,80 @@ class DecodeService:
         self._coalesced = 0
         self._fused = 0
         self._flushes = 0
+        self._ingests = 0
 
-    def register(self, name: str, plan: RecoilPlan, stream: np.ndarray,
-                 final_states: np.ndarray) -> None:
+    def register(self, name: str, plan: RecoilPlan, stream, final_states,
+                 *, model=None) -> None:
+        """Register encoded content.  ``stream`` is a raw word array or an
+        already-resident :class:`DeviceStream` (e.g. from :meth:`ingest` —
+        never re-uploaded).  The content is validated against the service's
+        model before it can serve: a mismatched payload raises here instead
+        of silently mis-decoding for every client.  Pass ``model`` (the
+        model the content was encoded with) to also check the distribution
+        tables themselves."""
+        _validate_content(self.session.model, plan, stream, final_states,
+                          enc_model=model)
         # Pending requests hold thinned batches of the CURRENT content;
         # dispatch them against it before it is replaced (a re-registered
         # name with stale pending metadata would otherwise decode the new
         # stream with the old split windows — silently wrong symbols).
         if any(key[0] == name for _, key, _, _ in self._pending):
             self.flush()
+        if not isinstance(stream, DeviceStream):
+            stream = self.session.upload_stream(stream)
         self._contents[name] = _Content(
-            stream=self.session.upload_stream(stream), plan=plan,
+            stream=stream, plan=plan,
             final_states=np.asarray(final_states, np.uint32))
         for cache in (self._batches, self._plans):   # re-registration
             for key in [k for k in cache if k[0] == name]:
                 del cache[key]
         self._fused_plans.clear()
+
+    # ------------------------------------------------------------------
+    # Ingest (encode engine -> registration, stream stays on device)
+    # ------------------------------------------------------------------
+
+    def ingest(self, name: str, symbols: np.ndarray, n_splits: int) -> RecoilPlan:
+        """Encode + split-plan ``symbols`` on device (``core.encode``
+        ingest engine) and register the result under ``name``.  On the
+        jnp/sharded backends the bitstream never visits the host; only the
+        split metadata does.  (The Pallas backend slabs from host words,
+        so its ingested streams are host-materialized here — at ingest
+        time, not at some later client's decode.)  Returns the registered
+        :class:`RecoilPlan` (e.g. for clients that want to know the
+        supported parallelism)."""
+        res = self._encode_session().ingest(symbols, n_splits)
+        self.register(name, res.plan, self._residency(res.stream),
+                      res.final_states)
+        self._ingests += 1
+        return res.plan
+
+    def ingest_batch(self, contents: dict, n_splits: int) -> dict:
+        """Ingest many contents through ONE vmapped encode dispatch:
+        ``{name: symbols}`` -> ``{name: RecoilPlan}``."""
+        names = list(contents)
+        results = self._encode_session().ingest_batch(
+            [contents[n] for n in names], n_splits)
+        for n, r in zip(names, results):
+            self.register(n, r.plan, self._residency(r.stream),
+                          r.final_states)
+            self._ingests += 1
+        return {n: r.plan for n, r in zip(names, results)}
+
+    def _residency(self, ds: DeviceStream) -> DeviceStream:
+        """Adapt an ingested (device-words, host=None) stream to the decode
+        backend's residency: Pallas builds per-block slabs from host words
+        and would otherwise reject the handle on every client decode."""
+        if self.session.impl != "pallas" or ds.host is not None:
+            return ds
+        host = np.asarray(ds.words[:ds.n_words])
+        return DeviceStream(words=None, host=host, n_words=ds.n_words,
+                            bucket=ds.bucket)
+
+    def _encode_session(self) -> EncoderSession:
+        if self._encoder is None:
+            self._encoder = EncoderSession(self.session.model)
+        return self._encoder
 
     # ------------------------------------------------------------------
     # Request preparation (memoized per (name, n_threads))
@@ -326,11 +394,59 @@ class DecodeService:
     @property
     def stats(self) -> ServiceStats:
         e = self.session.stats
+        enc = self._encoder.stats if self._encoder is not None else None
         return ServiceStats(
             compiles=e.compiles, cache_hits=e.cache_hits, decodes=e.decodes,
             plan_hits=self._plan_hits, plan_misses=self._plan_misses,
             coalesced_requests=self._coalesced, fused_dispatches=self._fused,
-            flushes=self._flushes)
+            flushes=self._flushes, ingests=self._ingests,
+            encode_compiles=enc.compiles if enc else 0,
+            encode_fallbacks=enc.fallbacks if enc else 0)
+
+
+def _validate_content(model: StaticModel, plan: RecoilPlan, stream,
+                      final_states, enc_model=None) -> None:
+    """Loud registration-time validation (a mismatched payload would decode
+    to silent garbage for every client — fail here instead).
+
+    Checks everything derivable from the metadata: way count, stream/plan
+    word-count agreement, final-state shape and the rANS state invariant
+    (``L <= x < 2^32``), and the plan's own split invariants.  When the
+    caller supplies the model the content was *encoded* with, the
+    distribution tables and params are compared against the service model
+    too (the one mismatch pure metadata cannot reveal)."""
+    p = model.params
+    if plan.ways != p.ways:
+        raise ValueError(
+            f"content was planned for {plan.ways}-way interleaving but the "
+            f"service model uses ways={p.ways}")
+    n_words = (stream.n_words if isinstance(stream, DeviceStream)
+               else len(stream))
+    if n_words != plan.n_words:
+        raise ValueError(
+            f"stream has {n_words} words but the plan says "
+            f"{plan.n_words} — truncated or mismatched payload")
+    fs = np.asarray(final_states)
+    if fs.shape != (p.ways,):
+        raise ValueError(
+            f"final_states shape {fs.shape} != (ways,) = ({p.ways},)")
+    if fs.size and (int(fs.min()) < p.lower_bound
+                    or int(fs.max()) >= 2 ** 32):
+        raise ValueError(
+            "final states violate the rANS invariant L <= x < 2^32 — "
+            "content was not produced by a compatible encoder")
+    plan.validate(p.lower_bound)
+    if enc_model is not None:
+        q = enc_model.params
+        if (q.n_bits, q.ways) != (p.n_bits, p.ways):
+            raise ValueError(
+                f"content encoded with n_bits={q.n_bits}, ways={q.ways}; "
+                f"service model has n_bits={p.n_bits}, ways={p.ways}")
+        if (np.asarray(enc_model.f).shape != np.asarray(model.f).shape
+                or not np.array_equal(enc_model.f, model.f)):
+            raise ValueError(
+                "content was encoded with a different distribution table "
+                "than the service model — it would mis-decode")
 
 
 def _fuse_streams(streams: list[DeviceStream]) -> tuple[DeviceStream, dict]:

@@ -1,0 +1,360 @@
+"""Ingest engine: bit-exactness vs the host oracles, tier fallbacks,
+compile accounting, and service-level ingest/validation.
+
+Parity is the contract (ISSUE acceptance): the engine's stream, emission
+log, final states, and Definition-4.1 split metadata must be bit-identical
+to ``interleaved.encode_interleaved`` / ``heuristic``-backed
+``recoil.plan_splits`` for static AND adaptive models, including ragged
+lengths not a multiple of W — and the ingested content must round-trip
+through the decode engine.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import recoil
+from repro.core.adaptive import ContextModel, encode_interleaved_adaptive
+from repro.core.encode import EncoderSession
+from repro.core.encode.ops import ROUNDS
+from repro.core.engine import DecoderSession
+from repro.core.interleaved import encode_interleaved
+from repro.core.rans import RansParams, StaticModel
+from repro.core.vectorized import encode_interleaved_fast
+from repro.runtime.serve import DecodeService
+
+PARAMS = RansParams(n_bits=11, ways=32)
+
+
+def _model_and_syms(n, seed=0, lam=40.0, cover_alphabet=False):
+    rng = np.random.default_rng(seed)
+    syms = np.minimum(rng.exponential(lam, size=n).astype(np.int64), 255)
+    basis = np.concatenate([syms, np.arange(256)]) if cover_alphabet else syms
+    return StaticModel.from_symbols(basis, 256, PARAMS), syms
+
+
+def _assert_plans_equal(got: recoil.RecoilPlan, want: recoil.RecoilPlan):
+    assert (got.n_symbols, got.n_words, got.ways) == \
+        (want.n_symbols, want.n_words, want.ways)
+    assert len(got.points) == len(want.points)
+    for a, b in zip(got.points, want.points):
+        assert a.offset == b.offset
+        np.testing.assert_array_equal(a.k, b.k)
+        np.testing.assert_array_equal(a.y, b.y)
+
+
+# ---------------------------------------------------------------------------
+# Encode parity (stream + emission log + final states)
+# ---------------------------------------------------------------------------
+
+# Ragged lengths (not multiples of W), tiny (< W), and W-aligned.
+@pytest.mark.parametrize("n", [7, 31, 32, 1_000, 8_192, 20_013])
+def test_encode_matches_python_oracle(n):
+    model, syms = _model_and_syms(max(n, 64), seed=n)
+    syms = syms[:n]
+    ref = encode_interleaved(syms, model)
+    enc = EncoderSession(model).encode(syms)
+    for field in ("stream", "final_states", "k_of_word", "y_of_word"):
+        np.testing.assert_array_equal(getattr(enc, field),
+                                      getattr(ref, field), err_msg=field)
+    assert enc.n_symbols == ref.n_symbols
+
+
+def test_encode_matches_vectorized_wrapper():
+    """The moved scan still backs encode_interleaved_fast bit-exactly."""
+    model, syms = _model_and_syms(15_003, seed=3)
+    ref = encode_interleaved(syms, model)
+    fast = encode_interleaved_fast(syms, model)
+    for field in ("stream", "final_states", "k_of_word", "y_of_word"):
+        np.testing.assert_array_equal(getattr(fast, field),
+                                      getattr(ref, field), err_msg=field)
+
+
+@pytest.mark.parametrize("ways", [64, 128])
+def test_encode_wide_interleave_matches_oracle(ways):
+    """W > 32 exceeds the uint32 lane bitmap — the compaction must take the
+    lane-rank path and stay bit-exact (the 128-way TPU-native variant)."""
+    params = RansParams(n_bits=11, ways=ways)
+    rng = np.random.default_rng(ways)
+    syms = np.minimum(rng.exponential(40.0, size=12_007).astype(np.int64),
+                      255)
+    model = StaticModel.from_symbols(syms, 256, params)
+    ref = encode_interleaved(syms, model)
+    sess = EncoderSession(model)
+    enc = sess.encode(syms)
+    for field in ("stream", "final_states", "k_of_word", "y_of_word"):
+        np.testing.assert_array_equal(getattr(enc, field),
+                                      getattr(ref, field), err_msg=field)
+    res = sess.ingest(syms, 8)
+    _assert_plans_equal(res.plan, recoil.plan_splits(ref, 8))
+    out = DecoderSession(model).decode(res.plan, res.stream,
+                                       res.final_states)
+    np.testing.assert_array_equal(np.asarray(out), syms)
+
+
+def test_ingested_stream_bucket_matches_uploaded():
+    """Ingested DeviceStreams land in the same residency bucket an
+    upload_stream of the same words would, so decode executables are
+    shared between registered and ingested copies."""
+    model, syms = _model_and_syms(30_000, seed=13)
+    res = EncoderSession(model).ingest(syms, 8)
+    dec = DecoderSession(model)
+    ref = encode_interleaved_fast(syms, model)
+    up = dec.upload_stream(ref.stream)
+    assert res.stream.bucket == up.bucket
+    assert res.stream.words.shape[0] == res.stream.bucket
+
+
+def test_encode_adaptive_matches_oracle():
+    n = 9_003
+    ctx = (np.arange(n) % 4).astype(np.int32)
+    cm = ContextModel.from_scale_table([3.0, 8.0, 20.0, 60.0], ctx, 256,
+                                       PARAMS)
+    rng = np.random.default_rng(7)
+    syms = np.minimum(rng.exponential(30.0, size=n).astype(np.int64), 255)
+    ref = encode_interleaved_adaptive(syms, cm)
+    enc = EncoderSession(cm).encode(syms)
+    for field in ("stream", "final_states", "k_of_word", "y_of_word"):
+        np.testing.assert_array_equal(getattr(enc, field),
+                                      getattr(ref, field), err_msg=field)
+
+
+# ---------------------------------------------------------------------------
+# Ingest parity (split metadata + device stream + round-trip decode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,n_splits", [
+    (1_000, 1), (20_011, 2), (20_011, 16), (40_000, 64)])
+def test_ingest_matches_oracle_plan(n, n_splits):
+    model, syms = _model_and_syms(n, seed=n_splits)
+    ref = encode_interleaved_fast(syms, model)
+    oracle = recoil.plan_splits(ref, n_splits)
+    res = EncoderSession(model).ingest(syms, n_splits)
+    _assert_plans_equal(res.plan, oracle)
+    np.testing.assert_array_equal(res.final_states, ref.final_states)
+    np.testing.assert_array_equal(
+        np.asarray(res.stream.words[:res.n_words]).astype(np.uint16),
+        ref.stream)
+
+
+def test_ingest_roundtrips_through_decode_engine():
+    """Ingested stream handle (host=None) feeds the decoder directly."""
+    model, syms = _model_and_syms(25_007, seed=9)
+    res = EncoderSession(model).ingest(syms, 12)
+    assert res.stream.host is None
+    out = DecoderSession(model).decode(res.plan, res.stream,
+                                       res.final_states)
+    np.testing.assert_array_equal(np.asarray(out), syms)
+
+
+def test_ingest_random_parity_sweep():
+    """Property sweep: random sizes (ragged), rates, and split counts all
+    produce oracle-identical plans and streams."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(64, 20_000))
+        lam = float(rng.uniform(2, 80))
+        syms = np.minimum(rng.exponential(lam, size=n).astype(np.int64), 255)
+        model = StaticModel.from_symbols(
+            np.concatenate([syms, np.arange(256)]), 256, PARAMS)
+        sess = EncoderSession(model)
+        ref = encode_interleaved(syms, model)
+        for n_splits in (1, 3, int(rng.integers(2, 48))):
+            _assert_plans_equal(sess.ingest(syms, n_splits).plan,
+                                recoil.plan_splits(ref, n_splits))
+
+
+def test_ingest_adaptive_parity_and_roundtrip():
+    n = 6_005
+    ctx = (np.arange(n) % 3).astype(np.int32)
+    cm = ContextModel.from_scale_table([5.0, 15.0, 50.0], ctx, 256, PARAMS)
+    rng = np.random.default_rng(11)
+    syms = np.minimum(rng.exponential(25.0, size=n).astype(np.int64), 255)
+    ref = encode_interleaved_adaptive(syms, cm)
+    res = EncoderSession(cm).ingest(syms, 8)
+    _assert_plans_equal(res.plan, recoil.plan_splits(ref, 8))
+    from repro.core.adaptive import decode_recoil_adaptive
+    out = decode_recoil_adaptive(
+        res.plan, np.asarray(res.stream.words[:res.n_words]).astype(np.uint16),
+        res.final_states, cm)
+    np.testing.assert_array_equal(out, syms)
+
+
+def test_ingest_batch_matches_single():
+    contents = [_model_and_syms(m, seed=m)[1] for m in (5_000, 7_777, 6_001)]
+    model = StaticModel.from_symbols(np.concatenate(contents), 256, PARAMS)
+    sess = EncoderSession(model)
+    singles = [sess.ingest(c, 8) for c in contents]
+    batched = sess.ingest_batch(contents, 8)
+    for s, b, c in zip(singles, batched, contents):
+        _assert_plans_equal(b.plan, s.plan)
+        np.testing.assert_array_equal(
+            np.asarray(b.stream.words[:b.n_words]),
+            np.asarray(s.stream.words[:s.n_words]))
+        out = DecoderSession(model).decode(b.plan, b.stream, b.final_states)
+        np.testing.assert_array_equal(np.asarray(out), c)
+
+
+# ---------------------------------------------------------------------------
+# Tier fallbacks (bit-exactness never depends on the fast path)
+# ---------------------------------------------------------------------------
+
+def test_heuristic_expansion_fallback_bit_exact():
+    """A skewed model at aggressive split counts forces window expansion:
+    the fast round-0 executable flags it, the full tier reproduces the
+    oracle exactly (this (seed, lam, splits) combo is a known trigger)."""
+    rng = np.random.default_rng(2)
+    syms = np.minimum(rng.exponential(2.0, size=4_000).astype(np.int64), 255)
+    model = StaticModel.from_symbols(syms, 256, PARAMS)
+    sess = EncoderSession(model)
+    res = sess.ingest(syms, 100)
+    assert sess.stats.fallbacks == 1, sess.stats.snapshot()
+    ref = encode_interleaved(syms, model)
+    _assert_plans_equal(res.plan, recoil.plan_splits(ref, 100))
+
+
+def test_capacity_overflow_fallback_bit_exact():
+    """>8 bits/symbol payloads overflow the fast capacity tier: flagged,
+    re-run at full N-word capacity, still oracle-identical."""
+    params12 = RansParams(n_bits=12, ways=32)
+    rng = np.random.default_rng(3)
+    syms = rng.integers(0, 4096, size=60_000).astype(np.int64)
+    model = StaticModel.from_symbols(
+        np.concatenate([syms, np.arange(4096)]), 4096, params12)
+    sess = EncoderSession(model)
+    res = sess.ingest(syms, 8)
+    assert sess.stats.fallbacks == 1, sess.stats.snapshot()
+    ref = encode_interleaved(syms, model)
+    _assert_plans_equal(res.plan, recoil.plan_splits(ref, 8))
+    np.testing.assert_array_equal(
+        np.asarray(res.stream.words[:res.n_words]).astype(np.uint16),
+        ref.stream)
+    out = DecoderSession(model).decode(res.plan, res.stream,
+                                       res.final_states)
+    np.testing.assert_array_equal(np.asarray(out), syms)
+
+
+def test_full_rounds_session_matches_fast_session():
+    """fast_rounds=False always runs the oracle-complete executable; both
+    sessions agree on a normal payload."""
+    model, syms = _model_and_syms(12_000, seed=5)
+    a = EncoderSession(model).ingest(syms, 16)
+    b = EncoderSession(model, fast_rounds=False).ingest(syms, 16)
+    _assert_plans_equal(a.plan, b.plan)
+
+
+# ---------------------------------------------------------------------------
+# Compile accounting (the engine's reason to exist)
+# ---------------------------------------------------------------------------
+
+def test_session_one_compile_per_bucket():
+    """>= 4 distinct content sizes within one shape bucket build exactly
+    ONE executable."""
+    model, syms = _model_and_syms(64_000, seed=1)
+    sess = EncoderSession(model)
+    for n in (50_000, 55_000, 60_000, 64_000):
+        res = sess.ingest(syms[:n], 24)
+        assert res.plan.n_symbols == n
+    assert sess.stats.encodes == 4
+    assert sess.stats.compiles == 1, sess.stats.snapshot()
+    assert sess.stats.cache_hits == 3
+    assert sess.stats.fallbacks == 0
+
+
+def test_session_split_count_shares_bucket():
+    """Different n_splits within one split-slot bucket reuse the
+    executable (n_splits is a traced scalar, not a static)."""
+    model, syms = _model_and_syms(30_000, seed=2)
+    sess = EncoderSession(model)
+    ref = encode_interleaved_fast(syms, model)
+    for n_splits in (33, 48, 64):                    # one pow2 bucket (64)
+        _assert_plans_equal(sess.ingest(syms, n_splits).plan,
+                            recoil.plan_splits(ref, n_splits))
+    assert sess.stats.compiles == 1, sess.stats.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# Service ingest + registration validation
+# ---------------------------------------------------------------------------
+
+def test_service_ingest_and_decode():
+    model, syms = _model_and_syms(30_000, seed=4)
+    svc = DecodeService(model)
+    plan = svc.ingest("c", syms, 16)
+    assert plan.n_threads >= 2
+    np.testing.assert_array_equal(np.asarray(svc.decode("c", 8)), syms)
+    np.testing.assert_array_equal(np.asarray(svc.decode("c", 16)), syms)
+    assert svc.stats.ingests == 1
+    assert svc.stats.encode_compiles >= 1
+
+
+def test_service_ingest_on_pallas_backend():
+    """A pallas-impl service host-materializes ingested streams at ingest
+    time (its executor slabs from host words), so client decodes work
+    instead of raising on every request."""
+    model, syms = _model_and_syms(12_000, seed=17)
+    svc = DecodeService(model, impl="pallas")
+    svc.ingest("c", syms, 8)
+    np.testing.assert_array_equal(np.asarray(svc.decode("c", 4)), syms)
+
+
+def test_service_ingest_batch():
+    contents = {f"a{i}": _model_and_syms(4_000 + 311 * i, seed=i)[1]
+                for i in range(3)}
+    model = StaticModel.from_symbols(
+        np.concatenate(list(contents.values())), 256, PARAMS)
+    svc = DecodeService(model)
+    plans = svc.ingest_batch(contents, 8)
+    assert set(plans) == set(contents)
+    for name, syms in contents.items():
+        np.testing.assert_array_equal(np.asarray(svc.decode(name, 4)), syms)
+    assert svc.stats.ingests == 3
+
+
+def test_register_validates_content():
+    model, syms = _model_and_syms(10_000, seed=6)
+    enc = encode_interleaved_fast(syms, model)
+    plan = recoil.plan_splits(enc, 8)
+    svc = DecodeService(model)
+    with pytest.raises(ValueError, match="words"):
+        svc.register("c", plan, enc.stream[:-3], enc.final_states)
+    with pytest.raises(ValueError, match="ways"):
+        svc.register("c", plan, enc.stream, enc.final_states[:-1])
+    with pytest.raises(ValueError, match="invariant"):
+        svc.register("c", plan, enc.stream,
+                     np.zeros_like(enc.final_states))
+    other = StaticModel.from_symbols((syms * 5 + 3) % 256, 256, PARAMS)
+    with pytest.raises(ValueError, match="distribution"):
+        svc.register("c", plan, enc.stream, enc.final_states, model=other)
+    wrong_ways = RansParams(n_bits=11, ways=64)
+    with pytest.raises(ValueError, match="ways"):
+        svc.register(
+            "c", recoil.RecoilPlan(points=(), n_symbols=enc.n_symbols,
+                                   n_words=enc.n_words, ways=64),
+            enc.stream, enc.final_states)
+    del wrong_ways
+    # the valid registration still goes through
+    svc.register("c", plan, enc.stream, enc.final_states, model=model)
+    np.testing.assert_array_equal(np.asarray(svc.decode("c", 8)), syms)
+
+
+def test_ingest_rejects_bad_symbols():
+    model, syms = _model_and_syms(5_000, seed=8)
+    svc = DecodeService(model)
+    with pytest.raises(ValueError, match="alphabet"):
+        svc.ingest("oob", np.array([1, 2, 300]), 2)
+    with pytest.raises(ValueError, match="alphabet"):
+        svc.ingest("neg", np.array([-1, 2, 3]), 2)
+    # a symbol the model never saw has f == 0 -> loud, not silent garbage
+    missing = int(np.setdiff1d(np.arange(256),
+                               np.unique(syms))[0]) \
+        if len(np.setdiff1d(np.arange(256), np.unique(syms))) else None
+    if missing is not None:
+        with pytest.raises(ValueError, match="zero quantized frequency"):
+            svc.ingest("zf", np.array([missing] * 100), 2)
+
+
+def test_encoder_rejects_oversized_request():
+    model, _ = _model_and_syms(64, seed=0)
+    sess = EncoderSession(model)
+    with pytest.raises(ValueError, match="at least one"):
+        sess.ingest(np.zeros(10, np.int64), 0)
