@@ -1,0 +1,231 @@
+"""Serving pipeline under mixed ingest+decode load: broker vs synchronous.
+
+The scenario is the paper's content-delivery server under heavy traffic:
+a pool of clients with heterogeneous declared parallelism (1 / 8 / 64
+threads) fetches small hot assets while the server continuously re-ingests
+refreshed large assets.  One Poisson-mixed open-loop trace is generated
+once and replayed at saturation through both serving paths, so the
+comparison is sustained capacity on an identical workload:
+
+  * **sync** — the pre-pipeline serving loop: every event runs on the
+    caller's thread in arrival order; ``ingest`` BLOCKS all decode traffic
+    behind the encode executable, decodes coalesce via the static
+    ``submit``/``flush`` microbatch policy.
+  * **pipeline** — ``DecodeService.start_pipeline()``: the broker queues
+    decodes on capability lanes (adaptive, quantized group sizing), the
+    ingest worker coalesces refreshes into vmapped ``ingest_batch``
+    dispatches, and the two overlap on separate threads
+    (``OverlapClock`` reports how much ingest cost was hidden).
+
+Both paths are shape-warm before timing (the broker via ``warm()`` — the
+closed quantized-group shape set — plus one untimed trace replay each), so
+the measured windows must show **0 recompiles and 0 encode fallbacks**;
+the CI guard asserts that and the >= 1.5x sustained-throughput floor, plus
+bit-exactness of every response and of capability-downscaled decodes vs
+full parallelism.
+
+Writes ``benchmarks/results/pipeline.json`` (CI artifact) and returns CSV
+rows for the run.py driver.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.rans import RansParams, StaticModel
+from repro.runtime.pipeline import BrokerSaturated, ControllerConfig
+from repro.runtime.serve import DecodeService
+
+# Decode traffic: hot assets fetched by heterogeneous clients.
+N_CONTENTS = 8
+CAPABILITIES = (1, 8, 64)
+DECODE_SPLITS = 64          # server-side planned parallelism (thinned down)
+# Ingest traffic: large assets continuously refreshed.
+N_INGEST = 4
+INGEST_SPLITS = 64
+
+QUICK = dict(decode_symbols=16_384, ingest_symbols=262_144,
+             n_decode_events=360, n_ingest_events=28)
+FULL = dict(decode_symbols=32_768, ingest_symbols=524_288,
+            n_decode_events=720, n_ingest_events=56)
+
+ARRIVAL_RATE_HZ = 400.0     # Poisson stamp spacing (replayed at saturation)
+
+
+def _make_trace(cfg: dict, rng) -> list:
+    """One Poisson-mixed event trace: ('decode', name, cap) and
+    ('ingest', name) events in randomized order with exponential
+    inter-arrival stamps.  The same trace drives both serving paths."""
+    kinds = (["decode"] * cfg["n_decode_events"]
+             + ["ingest"] * cfg["n_ingest_events"])
+    rng.shuffle(kinds)
+    gaps = rng.exponential(1.0 / ARRIVAL_RATE_HZ, size=len(kinds))
+    t, trace, ingest_i = 0.0, [], 0
+    for kind, gap in zip(kinds, gaps):
+        t += gap
+        if kind == "decode":
+            trace.append(("decode", f"hot{rng.integers(N_CONTENTS)}",
+                          CAPABILITIES[rng.integers(len(CAPABILITIES))], t))
+        else:
+            trace.append(("ingest", f"big{ingest_i % N_INGEST}", None, t))
+            ingest_i += 1
+    return trace
+
+
+def _build_service(model, hot, big, microbatch=8):
+    # max_delay effectively off: the sync path then flushes on size only,
+    # which makes its group shapes a pure function of the trace — the warm
+    # replay covers every shape and the measured sync window is genuinely
+    # compile-free.  (With a live delay bound the wall clock fragments
+    # groups differently each replay and the static path recompiles
+    # mid-measurement — the shape-drift problem the broker's quantized
+    # lanes exist to solve — but the guard should hold even granting the
+    # baseline its best case.)
+    svc = DecodeService(model, impl="jnp", microbatch=microbatch,
+                        max_delay_ms=1e9)
+    svc.ingest_batch(hot, DECODE_SPLITS)
+    svc.ingest_batch(big, INGEST_SPLITS)
+    return svc
+
+
+def _replay_sync(svc, trace, hot, big) -> float:
+    """Arrival-order replay on the caller's thread; returns makespan."""
+    t0 = time.perf_counter()
+    tickets = []
+    for kind, name, cap, _t in trace:
+        if kind == "decode":
+            tickets.append((name, svc.submit(name, cap)))
+        else:
+            svc.ingest(name, big[name], INGEST_SPLITS)
+    svc.flush()
+    for name, t in tickets:
+        np.asarray(t.result())
+    dt = time.perf_counter() - t0
+    for name, t in tickets:
+        assert (np.asarray(t.result()) == hot[name]).all(), name
+    return dt
+
+
+def _replay_pipeline(svc, broker, trace, hot, big) -> tuple[float, int]:
+    """Saturation replay through the broker; admission rejections back off
+    and retry (open-loop pushback).  Returns (makespan, backpressure)."""
+    t0 = time.perf_counter()
+    tickets, ingest_tickets, backpressure = [], [], 0
+    for kind, name, cap, _t in trace:
+        while True:
+            try:
+                if kind == "decode":
+                    tickets.append((name, svc.submit(name, cap)))
+                else:
+                    ingest_tickets.append(
+                        broker.submit_ingest(name, big[name], INGEST_SPLITS))
+                break
+            except BrokerSaturated:
+                backpressure += 1
+                time.sleep(0.001)
+    broker.drain(timeout=600)
+    for name, t in tickets:
+        np.asarray(t.result(timeout=60))
+    dt = time.perf_counter() - t0
+    for name, t in tickets:
+        assert (np.asarray(t.result(timeout=60)) == hot[name]).all(), name
+    for t in ingest_tickets:   # an ingest failure must fail the bench, not
+        t.result(timeout=60)   # silently leave the old content serving
+    return dt, backpressure
+
+
+def _check_downscaling(svc, hot) -> None:
+    """Acceptance: downscaled-capability responses are bit-exact vs the
+    full-parallelism decode (the paper's §3.3 claim, end to end)."""
+    for name, payload in hot.items():
+        full = np.asarray(svc.decode(name, DECODE_SPLITS))
+        assert (full == payload).all(), name
+        for cap in CAPABILITIES:
+            out = np.asarray(svc.decode(name, cap))
+            assert (out == full).all(), (name, cap)
+
+
+def run(quick: bool = False) -> list:
+    cfg = QUICK if quick else FULL
+    rng = np.random.default_rng(17)
+    hot = {f"hot{i}": np.minimum(
+        rng.exponential(35.0, size=cfg["decode_symbols"]).astype(np.int64),
+        255) for i in range(N_CONTENTS)}
+    big = {f"big{i}": np.minimum(
+        rng.exponential(35.0, size=cfg["ingest_symbols"]).astype(np.int64),
+        255) for i in range(N_INGEST)}
+    model = StaticModel.from_symbols(
+        np.concatenate(list(hot.values()) + list(big.values())), 256,
+        RansParams(n_bits=11, ways=32))
+    trace = _make_trace(cfg, rng)
+    n_events = len(trace)
+
+    # ---- sync path: warm replay (compiles its arrival-driven group
+    # shapes), then the measured replay
+    sync_svc = _build_service(model, hot, big)
+    _check_downscaling(sync_svc, hot)
+    _replay_sync(sync_svc, trace, hot, big)
+    sync_compiles_before = sync_svc.stats.compiles
+    sync_s = _replay_sync(sync_svc, trace, hot, big)
+    sync_recompiles = sync_svc.stats.compiles - sync_compiles_before
+
+    # ---- pipeline path: enumerated shape warmup + one untimed replay,
+    # then the measured replay with recompile/fallback accounting
+    pipe_svc = _build_service(model, hot, big)
+    broker = pipe_svc.start_pipeline(
+        config=ControllerConfig(max_batch=8, target_delay_ms=25.0),
+        max_queue=256, max_ingest_queue=32)
+    broker.warm(list(hot), CAPABILITIES)
+    _replay_pipeline(pipe_svc, broker, trace, hot, big)
+    compiles_before = pipe_svc.stats.compiles
+    enc_before = pipe_svc.stats.encode_compiles
+    fallbacks_before = pipe_svc.stats.encode_fallbacks
+    pipe_s, backpressure = _replay_pipeline(pipe_svc, broker, trace, hot, big)
+    stats = pipe_svc.stats
+    recompiles = (stats.compiles - compiles_before
+                  + stats.encode_compiles - enc_before)
+    fallbacks = stats.encode_fallbacks - fallbacks_before
+    snap = broker.snapshot()
+    pipe_svc.stop_pipeline()
+
+    summary = {
+        "n_events": n_events,
+        "n_decode_events": cfg["n_decode_events"],
+        "n_ingest_events": cfg["n_ingest_events"],
+        "decode_symbols": cfg["decode_symbols"],
+        "ingest_symbols": cfg["ingest_symbols"],
+        "capabilities": list(CAPABILITIES),
+        "sync_events_per_s": round(n_events / sync_s, 1),
+        "pipeline_events_per_s": round(n_events / pipe_s, 1),
+        "speedup": round(sync_s / pipe_s, 2),
+        "sync_recompiles_measured": sync_recompiles,
+        "recompiles_measured": recompiles,
+        "fallbacks_measured": fallbacks,
+        "backpressure_events": backpressure,
+        "ingest_errors": snap["ingest_errors"],
+        "dispatch_errors": snap["dispatch_errors"],
+        "overlap_ratio": snap["overlap"]["overlap_ratio"],
+        "decode_busy_s": snap["overlap"]["decode_busy_s"],
+        "ingest_busy_s": snap["overlap"]["ingest_busy_s"],
+        "wait_ms": snap["wait"],
+        "service_ms": snap["service"],
+        "ingest_service_ms": snap["ingest_service"],
+        "dispatch_groups": snap["dispatch_groups"],
+        "ingest_dispatches": snap["ingest_dispatches"],
+        "downscaling_bit_exact": True,   # _check_downscaling asserted
+        "service_stats": stats.snapshot(),
+    }
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/pipeline.json", "w") as f:
+        json.dump(summary, f, indent=2)
+    return [
+        {"bench": "pipeline", "path": "sync_loop", "events": n_events,
+         "events_per_s": summary["sync_events_per_s"], "recompiles": ""},
+        {"bench": "pipeline", "path": "broker_overlapped", "events": n_events,
+         "events_per_s": summary["pipeline_events_per_s"],
+         "recompiles": recompiles},
+    ]

@@ -10,6 +10,7 @@ Emits CSV to stdout and benchmarks/results/*.csv.  Suites:
     combine           §3.3         server-side metadata thinning latency
     engine            DESIGN §4    cache-warm DecoderSession vs one-shot path
     encode            DESIGN §5    cache-warm ingest engine vs host encode+plan
+    pipeline          DESIGN §8    async broker vs synchronous serving loop
     roofline          §Roofline    aggregates dry-run JSONs (if present)
 """
 
@@ -22,7 +23,8 @@ import sys
 import time
 
 from . import (bench_combine, bench_compression, bench_encode, bench_engine,
-               bench_partition_sweep, bench_roofline, bench_throughput)
+               bench_partition_sweep, bench_pipeline, bench_roofline,
+               bench_throughput)
 
 SUITES = {
     "compression": bench_compression.run,
@@ -31,6 +33,7 @@ SUITES = {
     "combine": bench_combine.run,
     "engine": bench_engine.run,
     "encode": bench_encode.run,
+    "pipeline": bench_pipeline.run,
     "roofline": bench_roofline.run,
 }
 

@@ -20,11 +20,20 @@ host — the stream feeds :meth:`repro.runtime.serve.DecodeService.register`
 directly.  ``encode`` materializes a host :class:`EncodedStream` (the
 oracle-compatible object, used by the parity tests and host tooling).
 ``ingest_batch`` runs B contents through one vmapped executable.
+
+Thread model (DESIGN.md §8): the async pipeline's ingest worker encodes
+while the decode worker serves traffic, so the executable cache and stats
+are guarded by ``_lock`` — same contract as
+:class:`~repro.core.engine.session.DecoderSession`: a miss compiles under
+the lock (no double-compiles, exact ``stats.compiles``), the executable
+runs outside it.  ``prepare``/``_materialize`` are pure host work on
+request-local data and need no lock.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 
@@ -91,6 +100,7 @@ class EncoderSession:
             ways=self.params.ways, adaptive=self.adaptive, window=window)
         self.fast_rounds = fast_rounds
         self._exec: dict[tuple, object] = {}
+        self._lock = threading.Lock()   # guards _exec + stats (see header)
         self.stats = EncodeStats()
 
     # ------------------------------------------------------------------
@@ -120,7 +130,8 @@ class EncoderSession:
         (round-0 heuristic miss) or a stream-capacity overflow, the plan
         re-runs under the lazily compiled full tier (bit-exactness over
         speed; correctness never depends on the flags)."""
-        self.stats.encodes += 1
+        with self._lock:
+            self.stats.encodes += 1
         fast = self.fast_rounds and plan.words_bucket < plan.words_bucket_full
         rounds = 1 if self.fast_rounds else ROUNDS
         cap = plan.words_bucket if fast else plan.words_bucket_full
@@ -129,7 +140,8 @@ class EncoderSession:
             rounds < ROUNDS
             and bool(np.any(np.asarray(out["needs_expansion"]))))
         if flagged:
-            self.stats.fallbacks += 1
+            with self._lock:
+                self.stats.fallbacks += 1
             cap = plan.words_bucket_full
             out = self.executor.run(
                 self._executable(plan, ROUNDS, cap), plan)
@@ -137,14 +149,15 @@ class EncoderSession:
 
     def _executable(self, plan: EncodePlan, rounds: int, words_bucket: int):
         key = plan.key + (rounds, words_bucket)
-        exe = self._exec.get(key)
-        if exe is None:
-            exe = self.executor.lower(plan, expand_rounds=rounds,
-                                      words_bucket=words_bucket)
-            self._exec[key] = exe
-            self.stats.compiles += 1
-        else:
-            self.stats.cache_hits += 1
+        with self._lock:
+            exe = self._exec.get(key)
+            if exe is None:
+                exe = self.executor.lower(plan, expand_rounds=rounds,
+                                          words_bucket=words_bucket)
+                self._exec[key] = exe
+                self.stats.compiles += 1
+            else:
+                self.stats.cache_hits += 1
         return exe
 
     # ------------------------------------------------------------------

@@ -21,6 +21,7 @@ the executable cache and stats; it never branches on the backend.  Backends:
 
 from __future__ import annotations
 
+import threading
 import weakref
 
 import jax
@@ -77,6 +78,7 @@ class JnpExecutor(Executor):
         # would pin every one-off handle's device buffer for the session's
         # lifetime) so a recycled id can never serve a stale upload.
         self._stream_cache: dict[int, tuple[weakref.ref, DeviceStream]] = {}
+        self._cache_lock = threading.Lock()   # guards cache + prune + count
         self.stream_uploads = 0
 
     def _put(self, padded: np.ndarray) -> jax.Array:
@@ -93,19 +95,22 @@ class JnpExecutor(Executor):
 
     def resident(self, ds: DeviceStream) -> DeviceStream:
         """Ensure the handle has device words, uploading at most once per
-        live handle."""
+        live handle.  Lock-guarded: ``plan()`` may run from any thread
+        using the session directly (the pipeline's workers go through the
+        service lock, but the session's prepare/execute is public API)."""
         if ds.words is not None:
             return ds
-        hit = self._stream_cache.get(id(ds))
-        if hit is not None and hit[0]() is ds:
-            return hit[1]
-        up = self.upload_stream(ds.host)
-        if len(self._stream_cache) > 512:   # prune dead handles
-            for key in [k for k, (ref, _) in self._stream_cache.items()
-                        if ref() is None]:
-                del self._stream_cache[key]
-        self._stream_cache[id(ds)] = (weakref.ref(ds), up)
-        return up
+        with self._cache_lock:
+            hit = self._stream_cache.get(id(ds))
+            if hit is not None and hit[0]() is ds:
+                return hit[1]
+            up = self.upload_stream(ds.host)
+            if len(self._stream_cache) > 512:   # prune dead handles
+                for key in [k for k, (ref, _) in self._stream_cache.items()
+                            if ref() is None]:
+                    del self._stream_cache[key]
+            self._stream_cache[id(ds)] = (weakref.ref(ds), up)
+            return up
 
     def _split_bucket(self, S: int) -> int:
         return work_bucket(S)
@@ -148,21 +153,46 @@ class PallasExecutor(Executor):
         super().__init__(model, packed_lut, luts)
         self.interpret = interpret
         self.rows_per_block = rows_per_block
+        # Lazy host materialization for device-resident (ingested / fused)
+        # streams: the slab build reads host words, but the copy is deferred
+        # to the FIRST plan against the handle — ingest latency never pays
+        # it, and jnp/sharded decodes of the same handle never trigger it.
+        # Same weakref-identity cache discipline as JnpExecutor's upgrade
+        # cache (a recycled id can never serve stale words).
+        self._host_cache: dict[int, tuple[weakref.ref, np.ndarray]] = {}
+        self._cache_lock = threading.Lock()   # guards cache + prune + count
+        self.host_materializations = 0
+
+    def _host_words(self, ds: DeviceStream) -> np.ndarray:
+        if ds.host is not None:
+            return ds.host
+        if ds.words is None:
+            raise ValueError("DeviceStream has neither host nor device words")
+        with self._cache_lock:
+            hit = self._host_cache.get(id(ds))
+            if hit is not None and hit[0]() is ds:
+                return hit[1]
+            host = np.ascontiguousarray(np.asarray(ds.words[:ds.n_words]))
+            self.host_materializations += 1
+            if len(self._host_cache) > 512:   # prune dead handles
+                for key in [k for k, (ref, _) in self._host_cache.items()
+                            if ref() is None]:
+                    del self._host_cache[key]
+            self._host_cache[id(ds)] = (weakref.ref(ds), host)
+            return host
 
     def plan(self, batch: WalkBatch, ds: DeviceStream,
              n_symbols: int) -> DecodePlan:
         from repro.kernels.rans_decode.ops import (build_slabs, pack_batch,
                                                    pad_to_rows)
-        if ds.host is None:
-            raise ValueError("pallas executor needs host stream words "
-                             "(device-only fused streams are jnp/sharded)")
+        host_words = self._host_words(ds)
         p = self.model.params
         W = batch.ways
         rpb = self.rows_per_block
         packed, per_split, rows, pack, _ = pack_batch(batch)
         rows = pad_to_rows(packed, per_split, rows, pack,
                            work_bucket(-(-rows // rpb)) * rpb)
-        slabs, slab_lo = build_slabs(ds.host, per_split, rows, pack, rpb)
+        slabs, slab_lo = build_slabs(host_words, per_split, rows, pack, rpb)
         slab_b = pow2_bucket(slabs.shape[1], 8)
         if slab_b > slabs.shape[1]:
             slabs = np.pad(slabs, ((0, 0), (0, slab_b - slabs.shape[1])))

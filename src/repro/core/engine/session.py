@@ -12,11 +12,23 @@ All backend knowledge lives in the executor (``jnp`` / ``pallas`` /
 public API: callers that re-issue the same request shape (e.g.
 ``runtime.serve.DecodeService``) cache the :class:`DecodePlan` and skip the
 host-side preparation entirely.
+
+Thread model (DESIGN.md §8): the async serving pipeline dispatches decode
+and ingest from separate worker threads, so the executable cache and stats
+are guarded by ``_lock`` — a cache miss compiles under the lock (a racing
+thread waits instead of double-compiling, keeping ``stats.compiles``
+exact), while the compiled executable RUNS outside it (XLA executions are
+thread-safe; holding the lock there would serialize decode against any
+concurrent session user).  Executor ``plan()`` needs no *session* lock —
+its only cross-request state is the per-handle identity caches (stream
+upgrades, lazy host words, replicated re-pins), each guarded by its own
+executor-level lock.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import jax
 import numpy as np
@@ -66,6 +78,7 @@ class DecoderSession:
             impl, model, packed_lut, self._luts, interpret=interpret,
             rows_per_block=rows_per_block, mesh=mesh)
         self._exec: dict[tuple, object] = {}
+        self._lock = threading.Lock()   # guards _exec + stats (see header)
         self.stats = EngineStats()
 
     # ------------------------------------------------------------------
@@ -111,14 +124,15 @@ class DecoderSession:
 
     def execute(self, plan: DecodePlan) -> jax.Array:
         """Run a prepared plan: compile on bucket miss, else reuse."""
-        self.stats.decodes += 1
-        exe = self._exec.get(plan.key)
-        if exe is None:
-            exe = self.executor.lower(plan)
-            self._exec[plan.key] = exe
-            self.stats.compiles += 1
-        else:
-            self.stats.cache_hits += 1
+        with self._lock:
+            self.stats.decodes += 1
+            exe = self._exec.get(plan.key)
+            if exe is None:
+                exe = self.executor.lower(plan)
+                self._exec[plan.key] = exe
+                self.stats.compiles += 1
+            else:
+                self.stats.cache_hits += 1
         return self.executor.run(exe, plan)[:plan.n_symbols]
 
     def decode_batch(self, batch: WalkBatch, stream,

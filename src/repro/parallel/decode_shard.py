@@ -45,6 +45,8 @@ no split bytes through implicit reshards.
 from __future__ import annotations
 
 import math
+import threading
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +86,27 @@ class ShardedExecutor(JnpExecutor):
         # Slot tables replicate across the mesh once, at construction.
         self.luts = tuple(None if l is None else jax.device_put(l, self._repl)
                           for l in luts)
+        # Replicated re-pin cache: plan() must read the slab gather source
+        # under a mesh-consistent sharding, but re-pinning the SAME resident
+        # handle on every plan would move stream bytes per request under
+        # broker traffic (the pipeline plans on every fused-group miss).
+        # Weakref-identity keyed, like the jnp executor's upgrade cache;
+        # lock-guarded like it too (plan() may run from any thread).
+        self._repl_cache: dict[int, tuple[weakref.ref, jax.Array]] = {}
+        self._repl_lock = threading.Lock()
+
+    def _replicated(self, ds) -> jax.Array:
+        with self._repl_lock:
+            hit = self._repl_cache.get(id(ds))
+            if hit is not None and hit[0]() is ds:
+                return hit[1]
+            repl = jax.device_put(ds.words, self._repl)
+            if len(self._repl_cache) > 512:   # prune dead handles
+                for key in [k for k, (ref, _) in self._repl_cache.items()
+                            if ref() is None]:
+                    del self._repl_cache[key]
+            self._repl_cache[id(ds)] = (weakref.ref(ds), repl)
+            return repl
 
     # Streams upload replicated over the mesh; plan() thins them into
     # per-shard slabs with an on-device gather, so the replicated copy is
@@ -101,8 +124,9 @@ class ShardedExecutor(JnpExecutor):
         ds = self.resident(ds)
         # Fused streams built by the microbatcher (device-side concatenate)
         # may come back without an explicit sharding; re-pin replicated so
-        # the slab gather below reads a mesh-consistent source.
-        stream = jax.device_put(ds.words, self._repl)
+        # the slab gather below reads a mesh-consistent source (memoized
+        # per live handle — warm broker traffic moves no stream bytes).
+        stream = self._replicated(ds)
         p = self.model.params
         W = batch.ways
         S = batch.k.shape[0]

@@ -1,10 +1,128 @@
-"""Step metrics: JSONL logger + throughput/MFU accounting."""
+"""Step metrics: JSONL logger, throughput/MFU accounting, and the serving
+pipeline's latency/overlap instruments.
+
+:class:`LatencyWindow` is a bounded reservoir of per-request latencies with
+percentile queries — the broker keeps one for request *wait* (submit →
+dispatch) and one for *service* (dispatch → result ready) time.
+:class:`OverlapClock` measures how much of one worker's busy time is hidden
+under another's (the ingest-vs-decode overlap ratio the async pipeline
+exists to maximize, DESIGN.md §8); it is exact interval accounting over
+begin/end transitions, not sampling.
+"""
 
 from __future__ import annotations
 
 import json
 import os
+import threading
 import time
+
+import numpy as np
+
+
+class LatencyWindow:
+    """Bounded ring of latency samples (seconds) with percentile queries.
+
+    The window holds the most recent ``size`` samples, so percentiles track
+    current behavior under sustained load instead of averaging over the whole
+    run.  Thread-safe: the broker's workers record from their own threads.
+    """
+
+    def __init__(self, size: int = 4096):
+        self._buf = np.zeros(size, np.float64)
+        self._n = 0          # total samples ever recorded
+        self._lock = threading.Lock()
+
+    def record(self, seconds: float) -> None:
+        with self._lock:
+            self._buf[self._n % len(self._buf)] = seconds
+            self._n += 1
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+    def percentile(self, p: float) -> float:
+        """p-th percentile (0-100) of the windowed samples, in seconds."""
+        with self._lock:
+            live = self._buf[:min(self._n, len(self._buf))]
+            if live.size == 0:
+                return 0.0
+            return float(np.percentile(live, p))
+
+    def summary_ms(self) -> dict:
+        """{count, p50_ms, p95_ms, p99_ms, mean_ms} over the window."""
+        with self._lock:
+            live = self._buf[:min(self._n, len(self._buf))].copy()
+            n = self._n
+        if live.size == 0:
+            return {"count": 0, "p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0,
+                    "mean_ms": 0.0}
+        q = np.percentile(live, [50, 95, 99]) * 1e3
+        return {"count": n, "p50_ms": float(q[0]), "p95_ms": float(q[1]),
+                "p99_ms": float(q[2]), "mean_ms": float(live.mean() * 1e3)}
+
+
+class OverlapClock:
+    """Exact two-worker busy/overlap accounting.
+
+    Workers bracket their busy segments with ``begin(worker)`` /
+    ``end(worker)``; the clock accumulates each worker's busy seconds and
+    the seconds during which BOTH were busy.  ``ratio()`` is overlapped
+    time over the smaller worker's busy time — 1.0 means the cheaper
+    worker's entire cost was hidden under the other (perfect overlap),
+    0.0 means fully serialized.
+    """
+
+    def __init__(self, a: str = "decode", b: str = "ingest"):
+        self._names = (a, b)
+        self._busy = {a: 0.0, b: 0.0}
+        self._since = {a: None, b: None}
+        self._both = 0.0
+        self._both_since = None
+        self._lock = threading.Lock()
+
+    def _other(self, worker: str) -> str:
+        return self._names[1] if worker == self._names[0] else self._names[0]
+
+    def begin(self, worker: str) -> float:
+        now = time.perf_counter()
+        with self._lock:
+            self._since[worker] = now
+            if self._since[self._other(worker)] is not None:
+                self._both_since = now
+        return now
+
+    def end(self, worker: str) -> float:
+        now = time.perf_counter()
+        with self._lock:
+            t0 = self._since[worker]
+            if t0 is not None:
+                self._busy[worker] += now - t0
+                self._since[worker] = None
+            if self._both_since is not None:
+                self._both += now - self._both_since
+                self._both_since = None
+        return now
+
+    def busy_seconds(self, worker: str) -> float:
+        with self._lock:
+            return self._busy[worker]
+
+    def ratio(self) -> float:
+        with self._lock:
+            floor = min(self._busy.values())
+            return self._both / floor if floor > 0 else 0.0
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            floor = min(self._busy.values())
+            return {
+                f"{name}_busy_s": round(self._busy[name], 4)
+                for name in self._names
+            } | {"overlap_s": round(self._both, 4),
+                 "overlap_ratio": round(self._both / floor, 4)
+                 if floor > 0 else 0.0}
 
 
 class MetricsLogger:

@@ -1,0 +1,26 @@
+"""Async serving pipeline: the control plane in front of the engine tiers.
+
+``DecodeService.start_pipeline()`` attaches a :class:`PipelineBroker`
+(worker threads overlapping ingest with decode, capability lanes, adaptive
+microbatching, admission control) and turns the service into a thin façade
+— see DESIGN.md §8 and the module docstrings here:
+
+  * :mod:`.broker`     — request broker, worker threads, backpressure
+  * :mod:`.controller` — EMA arrival/service estimators -> flush decisions
+  * :mod:`.capability` — per-client parallelism + downscaled plan/container
+"""
+
+from .broker import BrokerSaturated, PipelineBroker, PipelineTicket
+from .capability import CapabilityRegistry, ClientCapability
+from .controller import AdaptiveController, ControllerConfig, FlushDecision
+
+__all__ = [
+    "AdaptiveController",
+    "BrokerSaturated",
+    "CapabilityRegistry",
+    "ClientCapability",
+    "ControllerConfig",
+    "FlushDecision",
+    "PipelineBroker",
+    "PipelineTicket",
+]

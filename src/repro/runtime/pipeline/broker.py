@@ -1,0 +1,414 @@
+"""Async request broker: overlapped ingest+decode with capability lanes.
+
+The synchronous ``DecodeService`` serves from the caller's thread: an
+``ingest`` blocks every decode behind the encode executable, and flush
+policy is static.  The broker is the serving control plane in front of the
+engine tiers (DESIGN.md §8):
+
+  * **Two worker threads** — a decode dispatcher and an ingest worker.  The
+    encode and decode executables run concurrently (XLA executions release
+    the GIL), so warm ingest traffic overlaps in-flight decode instead of
+    stalling it; :class:`~repro.runtime.metrics.OverlapClock` measures the
+    achieved overlap exactly.
+  * **Capability lanes** — pending decode requests queue per declared
+    ``n_threads``.  Groups are formed within one lane: the fused walk runs
+    ``max(n_steps)`` scan steps for *every* row, so coalescing a 1-thread
+    client (long walks) with a 64-thread client (short walks) would make
+    the fast client pay the slow client's step count.  Uniform-capability
+    groups also keep the fused-bucket set small enough to pre-compile
+    (see ``controller.py`` on why that matters for the 0-recompile
+    steady state).
+  * **Adaptive flush** — the
+    :class:`~repro.runtime.pipeline.controller.AdaptiveController` decides
+    per tick, from EMA arrival-rate and service-time estimates, how large a
+    group to form and how long a partial group may wait.
+  * **Admission control** — a bounded total queue; a saturated broker
+    rejects with :class:`BrokerSaturated` (backpressure the load generator
+    can see) instead of queueing unboundedly.
+  * **Ingest coalescing** — queued ingest events for distinct contents fuse
+    into ONE vmapped ``ingest_batch`` dispatch (per-event ``n_splits``
+    preserved); repeats of one name stay ordered across batches.
+  * **Consistency** — groups are prepared at dispatch time under the
+    service lock (``DecodeService.dispatch_group``), so a concurrent
+    re-registration can never tear a group across content versions.
+
+Lock order: broker queue lock (``_cv``) and the service lock are never held
+together by the broker (queues are popped first, dispatch runs after), and
+``drain``/``close`` must not be called while holding the service lock.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+import jax
+
+from repro.runtime.metrics import LatencyWindow, OverlapClock
+from repro.runtime.serve import DecodeTicket
+
+from .capability import CapabilityRegistry
+from .controller import AdaptiveController, ControllerConfig
+
+
+class BrokerSaturated(RuntimeError):
+    """Admission rejection: the broker's queue bound is reached.  Callers
+    back off (or surface 429-style pushback); nothing was enqueued."""
+
+
+class PipelineTicket(DecodeTicket):
+    """Cross-thread future for a broker request (decode or ingest).
+
+    ``result(timeout)`` blocks on the worker's completion event —
+    timestamps record submit/dispatch/completion for the latency windows.
+    """
+
+    __slots__ = ("_event", "kind", "submitted_at", "dispatched_at",
+                 "completed_at")
+
+    def __init__(self, svc, kind: str = "decode"):
+        super().__init__(svc)
+        self._event = threading.Event()
+        self.kind = kind
+        self.submitted_at = time.perf_counter()
+        self.dispatched_at = None
+        self.completed_at = None
+
+    def _fulfill(self, out=None, err=None) -> None:
+        self.out = out
+        self.err = err
+        self.completed_at = time.perf_counter()
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = 120.0):
+        """The decode output (device symbol array) or ingest result
+        (:class:`~repro.core.recoil.RecoilPlan`); raises the dispatch error
+        if the request failed, TimeoutError if the broker never completed
+        it within ``timeout`` seconds."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"{self.kind} request not completed within {timeout}s")
+        if self.err is not None:
+            raise self.err
+        return self.out
+
+
+class PipelineBroker:
+    """Async serving pipeline over a :class:`DecodeService` (module
+    docstring).  Construct via ``svc.start_pipeline(...)`` so the service
+    façade routes ``submit``/``flush`` through the broker."""
+
+    def __init__(self, svc, *, controller: AdaptiveController | None = None,
+                 config: ControllerConfig | None = None,
+                 max_queue: int = 512, max_ingest_queue: int = 64,
+                 ingest_coalesce: int = 8, quantize_groups: bool = True):
+        self.svc = svc
+        self.controller = controller or AdaptiveController(config)
+        # Request-level bucketing: a deadline flush of a partial lane (say 3
+        # queued) is padded to the next quantized size with ticketless
+        # repeats of its own requests, so partial groups reuse the warmed
+        # executables instead of minting fresh bucket shapes (the same
+        # pad-to-bucket policy the engine applies to rows/steps/streams,
+        # lifted to whole requests).  Waste is bounded by one quantization
+        # step and only paid on partial flushes.
+        self.quantize_groups = bool(quantize_groups)
+        self.registry = CapabilityRegistry(svc)
+        self.max_queue = int(max_queue)
+        self.max_ingest_queue = int(max_ingest_queue)
+        self.ingest_coalesce = int(ingest_coalesce)
+
+        self._cv = threading.Condition()
+        self._lanes: dict[int, deque] = {}
+        self._ingest_q: deque = deque()
+        self._queued = 0            # decode requests in lanes
+        self._inflight = 0          # popped, not yet fulfilled (decode)
+        self._ingest_inflight = 0
+        self._closing = False
+
+        # Instruments (runtime.metrics): request wait (submit->dispatch),
+        # decode service (dispatch->result ready), ingest service, and the
+        # exact ingest-vs-decode overlap clock.
+        self.wait_window = LatencyWindow()
+        self.service_window = LatencyWindow()
+        self.ingest_window = LatencyWindow()
+        self.clock = OverlapClock("decode", "ingest")
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0
+        self.dispatch_groups = 0
+        self.dispatch_errors = 0
+        self.ingest_events = 0
+        self.ingest_dispatches = 0
+        self.ingest_errors = 0
+
+        self._decode_thread = threading.Thread(
+            target=self._decode_worker, name="recoil-decode", daemon=True)
+        self._ingest_thread = threading.Thread(
+            target=self._ingest_worker, name="recoil-ingest", daemon=True)
+        self._decode_thread.start()
+        self._ingest_thread.start()
+
+    # ------------------------------------------------------------------
+    # Client API
+    # ------------------------------------------------------------------
+
+    def submit(self, name: str, n_threads: int) -> PipelineTicket:
+        """Queue a decode on the ``n_threads`` capability lane."""
+        if self.svc.generation(name) == 0:
+            raise KeyError(f"content {name!r} is not registered")
+        ticket = PipelineTicket(self.svc, kind="decode")
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("broker is closed")
+            if self._queued + self._inflight >= self.max_queue:
+                self.rejected += 1
+                raise BrokerSaturated(
+                    f"decode queue at bound {self.max_queue}")
+            lane = int(n_threads)
+            self._lanes.setdefault(lane, deque()).append((ticket, name))
+            self._queued += 1
+            self.submitted += 1
+            self.controller.observe_arrival(lane, ticket.submitted_at)
+            self._cv.notify_all()
+        return ticket
+
+    def submit_ingest(self, name: str, symbols, n_splits: int) -> PipelineTicket:
+        """Queue an ingest (encode + split-plan + register) for the ingest
+        worker; the ticket resolves to the registered RecoilPlan."""
+        ticket = PipelineTicket(self.svc, kind="ingest")
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("broker is closed")
+            if len(self._ingest_q) + self._ingest_inflight \
+                    >= self.max_ingest_queue:
+                self.rejected += 1
+                raise BrokerSaturated(
+                    f"ingest queue at bound {self.max_ingest_queue}")
+            self._ingest_q.append((ticket, name, symbols, int(n_splits)))
+            self.ingest_events += 1
+            self._cv.notify_all()
+        return ticket
+
+    def drain(self, timeout: float | None = 120.0) -> None:
+        """Block until every queued and in-flight request has completed.
+        Must not be called while holding the service lock (the workers need
+        it to dispatch)."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._cv:
+            while (self._queued or self._inflight or self._ingest_q
+                   or self._ingest_inflight):
+                left = None if deadline is None \
+                    else deadline - time.perf_counter()
+                if left is not None and left <= 0:
+                    raise TimeoutError("broker drain timed out")
+                self._cv.wait(timeout=0.05 if left is None
+                              else min(left, 0.05))
+
+    def close(self) -> None:
+        """Finish all queued work, stop the workers, detach from the
+        service.  Idempotent."""
+        with self._cv:
+            self._closing = True
+            self._cv.notify_all()
+        self._decode_thread.join(timeout=120)
+        self._ingest_thread.join(timeout=120)
+        with self.svc._lock:
+            if self.svc._broker is self:
+                self.svc._broker = None
+
+    def __enter__(self) -> "PipelineBroker":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # Warmup
+    # ------------------------------------------------------------------
+
+    def warm(self, names, capabilities) -> None:
+        """Pre-compile every fused-group shape the controller can form over
+        ``names`` x ``capabilities``: for each capability lane, each
+        quantized batch size, and each power-of-two distinct-content count,
+        one synchronous dispatch.  The executable-cache key depends only on
+        bucketed dims (row sum, step max, fused-stream bucket, output
+        bucket), so this enumeration covers the steady state — after it, a
+        well-formed load runs with 0 compiles (the bench's guard)."""
+        names = list(names)
+        sizes = self.controller.cfg.sizes()
+        for cap in capabilities:
+            for size in sizes:
+                distinct = {min(d, len(names), size)
+                            for d in (1, 2, 4, 8, size)}
+                for d in sorted(distinct):
+                    reqs = [(names[i % d], cap) for i in range(size)]
+                    tickets = [DecodeTicket(self.svc) for _ in reqs]
+                    self.svc.dispatch_group(reqs, tickets)
+                    jax.block_until_ready(
+                        [t.out for t in tickets if t.out is not None])
+
+    # ------------------------------------------------------------------
+    # Workers
+    # ------------------------------------------------------------------
+
+    def _pick_lane(self, now: float):
+        """Under ``_cv``: the dispatchable lane with the oldest head
+        request (fairness), or (None, wait_ms) when every lane should keep
+        accumulating."""
+        best, best_take, best_age = None, 0, -1.0
+        min_wait = None
+        for lane, q in self._lanes.items():
+            if not q:
+                continue
+            oldest = q[0][0].submitted_at
+            age_ms = (now - oldest) * 1e3
+            decision = self.controller.decide(lane, len(q), age_ms, now)
+            if decision.dispatch:
+                if age_ms > best_age:
+                    best, best_take, best_age = lane, decision.batch, age_ms
+            else:
+                min_wait = (decision.wait_more_ms if min_wait is None
+                            else min(min_wait, decision.wait_more_ms))
+        return best, best_take, min_wait
+
+    def _decode_worker(self) -> None:
+        while True:
+            with self._cv:
+                now = time.perf_counter()
+                lane, take, min_wait = self._pick_lane(now)
+                if lane is None:
+                    if self._closing:
+                        if self._queued == 0:
+                            break
+                        # closing with partial lanes: flush them now
+                        lane = max((l for l, q in self._lanes.items() if q),
+                                   key=lambda l: len(self._lanes[l]))
+                        take = min(len(self._lanes[lane]),
+                                   self.controller.cfg.max_batch)
+                    else:
+                        self._cv.wait(timeout=None if min_wait is None
+                                      else max(min_wait, 1.0) * 1e-3)
+                        continue
+                q = self._lanes[lane]
+                popped = [q.popleft() for _ in range(min(take, len(q)))]
+                self._queued -= len(popped)
+                self._inflight += len(popped)
+            self._dispatch(lane, popped)
+            with self._cv:
+                self._inflight -= len(popped)
+                self._cv.notify_all()
+
+    def _dispatch(self, lane: int, popped: list) -> None:
+        tickets = [t for t, _ in popped]
+        requests = [(name, lane) for _, name in popped]
+        if self.quantize_groups:
+            target = self.controller.quantize(len(requests))
+            for i in range(target - len(requests)):
+                requests.append(requests[i % len(popped)])
+                tickets.append(DecodeTicket(self.svc))   # ticketless filler
+        t0 = self.clock.begin("decode")
+        for t, _ in popped:
+            t.dispatched_at = t0
+            self.wait_window.record(t0 - t.submitted_at)
+        try:
+            self.svc.dispatch_group(requests, tickets)
+            jax.block_until_ready(
+                [t.out for t in tickets if t.out is not None])
+        except Exception:
+            self.dispatch_errors += 1   # tickets already carry the error
+        t1 = self.clock.end("decode")
+        self.controller.observe_service(len(requests), t1 - t0)
+        for _ in popped:
+            self.service_window.record(t1 - t0)
+        self.dispatch_groups += 1
+        self.completed += len(popped)
+
+    def _pop_ingest_batch(self):
+        """Under ``_cv``: a queue prefix of events with DISTINCT names (a
+        repeated name must stay ordered across batches so a later refresh
+        cannot be registered before an earlier one), bounded by the
+        coalescing width."""
+        batch, names = [], set()
+        while self._ingest_q and len(batch) < self.ingest_coalesce:
+            if self._ingest_q[0][1] in names:
+                break
+            ev = self._ingest_q.popleft()
+            names.add(ev[1])
+            batch.append(ev)
+        return batch
+
+    def _ingest_worker(self) -> None:
+        while True:
+            with self._cv:
+                if not self._ingest_q:
+                    if self._closing:
+                        break
+                    self._cv.wait(timeout=0.05)
+                    continue
+                batch = self._pop_ingest_batch()
+                self._ingest_inflight += len(batch)
+            t0 = self.clock.begin("ingest")
+            try:
+                if len(batch) == 1:
+                    ticket, name, symbols, n_splits = batch[0]
+                    plan = self.svc.ingest(name, symbols, n_splits)
+                    ticket._fulfill(out=plan)
+                else:
+                    contents = {name: symbols
+                                for _, name, symbols, _ in batch}
+                    plans = self.svc.ingest_batch(
+                        contents, [n for _, _, _, n in batch])
+                    for ticket, name, _, _ in batch:
+                        ticket._fulfill(out=plans[name])
+            except Exception as e:
+                self.ingest_errors += 1
+                for ticket, *_ in batch:
+                    ticket._fulfill(err=e)
+            t1 = self.clock.end("ingest")
+            for _ in batch:
+                self.ingest_window.record((t1 - t0) / len(batch))
+            self.ingest_dispatches += 1
+            with self._cv:
+                self._ingest_inflight -= len(batch)
+                self._cv.notify_all()
+
+    # ------------------------------------------------------------------
+    # Stats
+    # ------------------------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        with self._cv:
+            return self._queued + len(self._ingest_q)
+
+    def snapshot(self) -> dict:
+        """The pipeline's observable state: queue depths, wait/service
+        latency percentiles, overlap ratio, counters (asserted in tests and
+        reported by ``bench_pipeline``)."""
+        with self._cv:
+            lanes = {lane: len(q) for lane, q in self._lanes.items() if q}
+            depth = self._queued
+            ingest_depth = len(self._ingest_q)
+        return {
+            "queue_depth": depth,
+            "ingest_queue_depth": ingest_depth,
+            "lanes": lanes,
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "dispatch_groups": self.dispatch_groups,
+            "dispatch_errors": self.dispatch_errors,
+            "ingest_events": self.ingest_events,
+            "ingest_dispatches": self.ingest_dispatches,
+            "ingest_errors": self.ingest_errors,
+            "wait": self.wait_window.summary_ms(),
+            "service": self.service_window.summary_ms(),
+            "ingest_service": self.ingest_window.summary_ms(),
+            "overlap": self.clock.snapshot(),
+            "controller": self.controller.snapshot(),
+            "registry": self.registry.snapshot(),
+        }

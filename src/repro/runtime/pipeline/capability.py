@@ -1,0 +1,175 @@
+"""Capability registry: per-client parallelism, declared once, served always.
+
+The paper's decoder-adaptive scalability (§3.3, §4.3) sizes metadata for the
+fastest decoder and *downscales* per client by deleting split entries.  The
+synchronous service API makes the client restate its ``n_threads`` on every
+call; the registry moves that to a per-client declaration:
+
+  * ``declare(client_id, n_threads)`` — records the client's parallel
+    capacity (a phone declares 2, a GPU box 2176);
+  * ``plan_for(name, client_id)`` — the content's split metadata thinned to
+    the client (``core.recoil.combine_plan`` — pure entry deletion),
+    memoized per ``(content generation, n_threads)`` so a thousand phones
+    share one thinning;
+  * ``container_for(name, client_id)`` — the full on-wire payload
+    (``core.container.pack_recoil``): bitstream + right-sized §4.3 metadata
+    blob, also generation-memoized.  This is what the content-delivery
+    example ships — transfer size shrinks monotonically with declared
+    parallelism while the bitstream bytes stay identical;
+  * ``submit_for(name, client_id)`` — route a decode through the service
+    (broker lanes when the pipeline is running) at the client's capability.
+
+Invalidation is by content *generation* (``DecodeService.generation`` bumps
+on every re-registration), so the registry never serves a stale thinning
+after an ingest refresh and needs no callback channel from the service.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.core import container
+from repro.core.interleaved import EncodedStream
+from repro.core.recoil import RecoilPlan, combine_plan
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientCapability:
+    client_id: str
+    n_threads: int
+
+
+class CapabilityRegistry:
+    """Client capability declarations + generation-memoized downscaling."""
+
+    def __init__(self, svc):
+        self._svc = svc
+        self._clients: dict[str, ClientCapability] = {}
+        # (name, n_threads) -> (generation, thinned plan / packed bytes).
+        # The generation is stored IN the value, not the key, so a content
+        # refresh overwrites the entry instead of leaking one plan + one
+        # full wire payload per (generation, capability) forever — the
+        # memos are bounded by #contents x #distinct capabilities.
+        self._plan_memo: dict[tuple, tuple[int, RecoilPlan]] = {}
+        self._container_memo: dict[tuple, tuple[int, bytes]] = {}
+        self._lock = threading.Lock()
+        self.memo_hits = 0
+        self.memo_misses = 0
+
+    # ------------------------------------------------------------------
+    # Declarations
+    # ------------------------------------------------------------------
+
+    def declare(self, client_id: str, n_threads: int) -> ClientCapability:
+        if n_threads < 1:
+            raise ValueError(
+                f"client {client_id!r} declared {n_threads} threads; "
+                "need at least one")
+        cap = ClientCapability(client_id=str(client_id),
+                               n_threads=int(n_threads))
+        with self._lock:
+            self._clients[cap.client_id] = cap
+        return cap
+
+    def n_threads(self, client_id: str) -> int:
+        with self._lock:
+            cap = self._clients.get(client_id)
+        if cap is None:
+            raise KeyError(
+                f"client {client_id!r} never declared a capability")
+        return cap.n_threads
+
+    @property
+    def clients(self) -> dict:
+        with self._lock:
+            return dict(self._clients)
+
+    # ------------------------------------------------------------------
+    # Downscaled serving
+    # ------------------------------------------------------------------
+
+    def _generation(self, name: str) -> int:
+        """Current content generation.  Callers read this BEFORE taking the
+        content snapshot: if a refresh lands in between, the memo entry is
+        tagged with the OLD generation and the next lookup treats it as a
+        miss (self-healing) — the reverse order could tag fresh-generation
+        keys with stale bytes."""
+        gen = self._svc.generation(name)
+        if gen == 0:
+            raise KeyError(f"content {name!r} is not registered")
+        return gen
+
+    def _lookup(self, memo: dict, key: tuple, gen: int):
+        """Under ``_lock``: the memoized value iff it matches the content's
+        CURRENT generation (a stale entry is a miss and gets overwritten)."""
+        with self._lock:
+            hit = memo.get(key)
+            if hit is not None and hit[0] == gen:
+                self.memo_hits += 1
+                return hit[1]
+            self.memo_misses += 1
+            return None
+
+    def plan_for(self, name: str, client_id: str) -> RecoilPlan:
+        """The content's split metadata thinned to the client's declared
+        parallelism (paper §3.3: pure entry deletion, no bitstream touch)."""
+        key = (name, self.n_threads(client_id))
+        gen = self._generation(name)
+        hit = self._lookup(self._plan_memo, key, gen)
+        if hit is not None:
+            return hit
+        plan = combine_plan(self._svc.content(name).plan, key[1])
+        with self._lock:
+            self._plan_memo[key] = (gen, plan)
+        return plan
+
+    def container_for(self, name: str, client_id: str) -> bytes:
+        """The client-sized on-wire payload: identical bitstream bytes,
+        §4.3 metadata thinned to the declared capability."""
+        key = (name, self.n_threads(client_id))
+        gen = self._generation(name)
+        hit = self._lookup(self._container_memo, key, gen)
+        if hit is not None:
+            return hit
+        c = self._svc.content(name)
+        plan = combine_plan(c.plan, key[1])
+        ds = c.stream
+        words = (ds.host if ds.host is not None
+                 else np.asarray(ds.words[:ds.n_words]))
+        # pack_recoil consumes only the stream/finals/geometry fields; the
+        # emission log is an encoder-side artifact the wire format never
+        # carries, so zeros stand in for it here.
+        enc = EncodedStream(
+            stream=np.ascontiguousarray(words).astype(np.uint16),
+            final_states=c.final_states,
+            n_symbols=plan.n_symbols,
+            params=self._svc.session.model.params,
+            k_of_word=np.zeros(ds.n_words, np.int64),
+            y_of_word=np.zeros(ds.n_words, np.uint32))
+        buf = container.pack_recoil(enc, self._svc.session.model, plan)
+        with self._lock:
+            self._container_memo[key] = (gen, buf)
+        return buf
+
+    def submit_for(self, name: str, client_id: str):
+        """Decode ticket at the client's declared capability (broker lanes
+        when the pipeline is running, sync microbatching otherwise)."""
+        return self._svc.submit(name, self.n_threads(client_id))
+
+    def decode_for(self, name: str, client_id: str):
+        """Immediate decode at the client's declared capability."""
+        return self._svc.decode(name, self.n_threads(client_id))
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "clients": {c.client_id: c.n_threads
+                            for c in self._clients.values()},
+                "memo_hits": self.memo_hits,
+                "memo_misses": self.memo_misses,
+                "plans_cached": len(self._plan_memo),
+                "containers_cached": len(self._container_memo),
+            }

@@ -34,11 +34,21 @@ visiting the host, DESIGN.md §5).  Two request paths:
     is a latency bound checked at submit time — size is the primary
     trigger; keep it comfortably above per-request COLD prep time or a
     first burst fragments into partial groups.
+
+``start_pipeline()`` upgrades the service to the async serving pipeline
+(``runtime.pipeline``, DESIGN.md §8): a broker with capability lanes,
+adaptive microbatching, admission control, and an ingest worker that
+overlaps encode traffic with decode dispatch.  With a broker attached the
+service is a thin façade — ``submit``/``flush`` route to the broker's
+queues and worker threads; ``decode``/``ingest``/``register`` remain
+callable from any thread (the service lock + session locks make the
+shared caches safe, see §8's lock model).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Optional
 
@@ -127,6 +137,7 @@ class ServiceStats:
     ingests: int = 0           # contents registered through the encode engine
     encode_compiles: int = 0   # ingest-engine executable builds
     encode_fallbacks: int = 0  # full-rounds heuristic re-runs
+    host_materializations: int = 0  # lazy device->host stream copies (pallas)
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -141,6 +152,13 @@ class DecodeTicket:
         self._svc = svc
         self.out = None
         self.err = None
+
+    def _fulfill(self, out=None, err=None) -> None:
+        """Dispatch completion hook — the broker's ticket subclass overrides
+        this to also release cross-thread waiters and timestamp the
+        completion; keep all result delivery going through it."""
+        self.out = out
+        self.err = err
 
     def result(self) -> jax.Array:
         """The request's device symbol array; forces a flush if the fused
@@ -178,6 +196,10 @@ class DecodeService:
         self.max_delay_ms = float(max_delay_ms)
         self._encoder: EncoderSession | None = None   # built on first ingest
         self._contents: dict[str, _Content] = {}
+        # Content generation counters: bumped on every (re-)registration so
+        # downstream memos keyed on content identity (the pipeline's
+        # capability registry) can invalidate without a callback channel.
+        self._generations: dict[str, int] = {}
         # (name, n_threads) -> prepared request, two granularities: the
         # thinned WalkBatch (fusable) and the full DecodePlan (single path).
         self._batches: dict[tuple, tuple[WalkBatch, int]] = {}
@@ -194,6 +216,13 @@ class DecodeService:
         self._fused = 0
         self._flushes = 0
         self._ingests = 0
+        # Service lock (DESIGN.md §8): guards content/memos/pending/counters.
+        # Reentrant because register() flushes stale pending requests while
+        # already holding it.  Heavy work never runs under it — encode and
+        # decode executables run outside, so the broker's ingest worker and
+        # decode worker only contend for the short host-prep sections.
+        self._lock = threading.RLock()
+        self._broker = None   # attached by start_pipeline()
 
     def register(self, name: str, plan: RecoilPlan, stream, final_states,
                  *, model=None) -> None:
@@ -206,21 +235,37 @@ class DecodeService:
         tables themselves."""
         _validate_content(self.session.model, plan, stream, final_states,
                           enc_model=model)
-        # Pending requests hold thinned batches of the CURRENT content;
-        # dispatch them against it before it is replaced (a re-registered
-        # name with stale pending metadata would otherwise decode the new
-        # stream with the old split windows — silently wrong symbols).
-        if any(key[0] == name for _, key, _, _ in self._pending):
-            self.flush()
-        if not isinstance(stream, DeviceStream):
-            stream = self.session.upload_stream(stream)
-        self._contents[name] = _Content(
-            stream=stream, plan=plan,
-            final_states=np.asarray(final_states, np.uint32))
-        for cache in (self._batches, self._plans):   # re-registration
-            for key in [k for k in cache if k[0] == name]:
-                del cache[key]
-        self._fused_plans.clear()
+        with self._lock:
+            # Pending requests hold thinned batches of the CURRENT content;
+            # dispatch them against it before it is replaced (a re-registered
+            # name with stale pending metadata would otherwise decode the new
+            # stream with the old split windows — silently wrong symbols).
+            # (Broker-mode groups are immune: they are built at dispatch
+            # time under this lock, so every group sees one consistent
+            # content version.)
+            if any(key[0] == name for _, key, _, _ in self._pending):
+                self._flush_pending()
+            if not isinstance(stream, DeviceStream):
+                stream = self.session.upload_stream(stream)
+            self._contents[name] = _Content(
+                stream=stream, plan=plan,
+                final_states=np.asarray(final_states, np.uint32))
+            self._generations[name] = self._generations.get(name, 0) + 1
+            for cache in (self._batches, self._plans):   # re-registration
+                for key in [k for k in cache if k[0] == name]:
+                    del cache[key]
+            self._fused_plans.clear()
+
+    def generation(self, name: str) -> int:
+        """Monotonic per-content registration counter (0 = never seen)."""
+        with self._lock:
+            return self._generations.get(name, 0)
+
+    def content(self, name: str) -> _Content:
+        """The current registered content record (snapshot — the record is
+        immutable; re-registration swaps the whole object)."""
+        with self._lock:
+            return self._contents[name]
 
     # ------------------------------------------------------------------
     # Ingest (encode engine -> registration, stream stays on device)
@@ -231,14 +276,15 @@ class DecodeService:
         ingest engine) and register the result under ``name``.  On the
         jnp/sharded backends the bitstream never visits the host; only the
         split metadata does.  (The Pallas backend slabs from host words,
-        so its ingested streams are host-materialized here — at ingest
-        time, not at some later client's decode.)  Returns the registered
-        :class:`RecoilPlan` (e.g. for clients that want to know the
-        supported parallelism)."""
+        but the device->host copy is LAZY — deferred to the first pallas
+        decode of the handle, so ingest latency never pays it and the
+        executor's ``host_materializations`` counts the copies exactly.)
+        Returns the registered :class:`RecoilPlan` (e.g. for clients that
+        want to know the supported parallelism)."""
         res = self._encode_session().ingest(symbols, n_splits)
-        self.register(name, res.plan, self._residency(res.stream),
-                      res.final_states)
-        self._ingests += 1
+        self.register(name, res.plan, res.stream, res.final_states)
+        with self._lock:
+            self._ingests += 1
         return res.plan
 
     def ingest_batch(self, contents: dict, n_splits: int) -> dict:
@@ -248,35 +294,27 @@ class DecodeService:
         results = self._encode_session().ingest_batch(
             [contents[n] for n in names], n_splits)
         for n, r in zip(names, results):
-            self.register(n, r.plan, self._residency(r.stream),
-                          r.final_states)
-            self._ingests += 1
+            self.register(n, r.plan, r.stream, r.final_states)
+            with self._lock:
+                self._ingests += 1
         return {n: r.plan for n, r in zip(names, results)}
 
-    def _residency(self, ds: DeviceStream) -> DeviceStream:
-        """Adapt an ingested (device-words, host=None) stream to the decode
-        backend's residency: Pallas builds per-block slabs from host words
-        and would otherwise reject the handle on every client decode."""
-        if self.session.impl != "pallas" or ds.host is not None:
-            return ds
-        host = np.asarray(ds.words[:ds.n_words])
-        return DeviceStream(words=None, host=host, n_words=ds.n_words,
-                            bucket=ds.bucket)
-
     def _encode_session(self) -> EncoderSession:
-        if self._encoder is None:
-            self._encoder = EncoderSession(self.session.model)
-        return self._encoder
+        with self._lock:
+            if self._encoder is None:
+                self._encoder = EncoderSession(self.session.model)
+            return self._encoder
 
     # ------------------------------------------------------------------
     # Request preparation (memoized per (name, n_threads))
     # ------------------------------------------------------------------
 
     def _thinned_batch(self, name: str, n_threads: int) -> tuple[WalkBatch, int]:
-        """Memoized host prep.  ``plan_hits``/``plan_misses`` count here (and
-        on the deeper ``_plans`` memo in :meth:`decode`): every request
-        increments exactly one of the two counters exactly once — a hit
-        means the per-request host preparation was skipped at some layer."""
+        """Memoized host prep (caller holds ``_lock``).  ``plan_hits``/
+        ``plan_misses`` count here (and on the deeper ``_plans`` memo in
+        :meth:`decode`): every request increments exactly one of the two
+        counters exactly once — a hit means the per-request host preparation
+        was skipped at some layer."""
         key = (name, n_threads)
         hit = self._batches.get(key)
         if hit is not None:
@@ -298,13 +336,15 @@ class DecodeService:
         """Decode registered content at the client's parallelism; returns a
         device int32 symbol array (no host round-trip)."""
         key = (name, n_threads)
-        plan = self._plans.get(key)
-        if plan is None:
-            batch, n = self._thinned_batch(name, n_threads)
-            plan = self.session.prepare(batch, self._contents[name].stream, n)
-            self._plans[key] = plan
-        else:
-            self._plan_hits += 1
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is None:
+                batch, n = self._thinned_batch(name, n_threads)
+                plan = self.session.prepare(
+                    batch, self._contents[name].stream, n)
+                self._plans[key] = plan
+            else:
+                self._plan_hits += 1
         return self.session.execute(plan)
 
     # ------------------------------------------------------------------
@@ -313,63 +353,121 @@ class DecodeService:
 
     def submit(self, name: str, n_threads: int) -> DecodeTicket:
         """Queue a request for coalescing (see module docstring for the
-        flush policy)."""
-        now = time.perf_counter()
-        if self._pending and (now - self._pending_t0) * 1e3 > self.max_delay_ms:
-            self.flush()
-        key = (name, n_threads)
-        batch, n = self._thinned_batch(name, n_threads)
-        ticket = DecodeTicket(self)
-        if not self._pending:
-            self._pending_t0 = now
-        self._pending.append((ticket, key, batch, n))
-        if len(self._pending) >= self.microbatch:
-            self.flush()
-        return ticket
+        flush policy).  With a pipeline broker attached
+        (:meth:`start_pipeline`) the request is queued on the broker's
+        capability lanes instead and dispatched by its worker thread."""
+        broker = self._broker
+        if broker is None:
+            with self._lock:
+                # Re-check under the lock: a raced start_pipeline() flushed
+                # _pending while attaching, so queueing here now would
+                # strand the ticket — route to the broker instead.
+                broker = self._broker
+                if broker is None:
+                    now = time.perf_counter()
+                    if (self._pending and (now - self._pending_t0) * 1e3
+                            > self.max_delay_ms):
+                        self._flush_pending()
+                    key = (name, n_threads)
+                    batch, n = self._thinned_batch(name, n_threads)
+                    ticket = DecodeTicket(self)
+                    if not self._pending:
+                        self._pending_t0 = now
+                    self._pending.append((ticket, key, batch, n))
+                    if len(self._pending) >= self.microbatch:
+                        self._flush_pending()
+                    return ticket
+        return broker.submit(name, n_threads)
 
-    def flush(self) -> None:
-        """Dispatch all pending requests as one fused executable call.  On a
-        dispatch error the group's tickets carry the exception (re-raised by
-        ``result()``) rather than stranding as forever-pending."""
-        reqs, self._pending = self._pending, []
+    def _flush_pending(self) -> None:
+        """Dispatch the sync-path pending queue (no broker interaction —
+        safe to call while holding the service lock, e.g. from
+        :meth:`register`'s stale-pending guard; a broker ``drain`` here
+        could deadlock against workers waiting on that lock)."""
+        with self._lock:
+            reqs, self._pending = self._pending, []
         if not reqs:
             return
         try:
             self._dispatch(reqs)
         except Exception as e:
             for ticket, _, _, _ in reqs:
-                ticket.err = e
+                ticket._fulfill(err=e)
+            raise
+
+    def flush(self) -> None:
+        """Dispatch all pending requests as one fused executable call.  On a
+        dispatch error the group's tickets carry the exception (re-raised by
+        ``result()``) rather than stranding as forever-pending.  With a
+        broker attached this also drains the broker's queues."""
+        self._flush_pending()
+        broker = self._broker   # local read: a concurrent stop_pipeline()
+        if broker is not None:  # may null the attribute between check/use
+            broker.drain()
+
+    def dispatch_group(self, requests, tickets) -> None:
+        """Broker backend: dispatch ``requests = [(name, n_threads), ...]``
+        as one fused executable call, fulfilling ``tickets`` positionally.
+
+        Unlike :meth:`submit`, the thinned batches are built HERE — at
+        dispatch time, under the service lock — so a group formed while an
+        ingest worker re-registers content can never mix one request's old
+        split metadata with another's new stream: every request in the
+        group is prepared against one consistent content snapshot."""
+        try:
+            with self._lock:
+                reqs = []
+                for ticket, (name, n_threads) in zip(tickets, requests):
+                    batch, n = self._thinned_batch(name, n_threads)
+                    reqs.append((ticket, (name, n_threads), batch, n))
+        except Exception as e:
+            for ticket in tickets:
+                ticket._fulfill(err=e)
+            raise
+        try:
+            self._dispatch(reqs)
+        except Exception as e:
+            for ticket, _, _, _ in reqs:
+                ticket._fulfill(err=e)
             raise
 
     def _dispatch(self, reqs) -> None:
-        self._flushes += 1
-        if len(reqs) == 1:
-            ticket, key, batch, n = reqs[0]
-            plan = self._plans.get(key)
-            if plan is None:
-                plan = self.session.prepare(
-                    batch, self._contents[key[0]].stream, n)
-                self._plans[key] = plan
-            ticket.out = self.session.execute(plan)
-            return
-        self._fused += 1
-        self._coalesced += len(reqs)
-        # Canonical request order: the fused layout is arrival-order
-        # independent, so any permutation of the same group shares one memo
-        # entry (tickets travel with their request; slices still land).
-        reqs.sort(key=lambda r: r[1])
-        group = tuple(key for _, key, _, _ in reqs)
-        hit = self._fused_plans.get(group)
-        if hit is None:
-            if len(self._fused_plans) >= self.MAX_FUSED_PLANS:
-                self._fused_plans.pop(next(iter(self._fused_plans)))
-            plan, sym_off, total = self._prepare_fused(reqs)
-            self._fused_plans[group] = (plan, sym_off, total)
-        else:
-            plan, sym_off, total = hit
+        """Plan under the service lock; EXECUTE outside it (the executable
+        run is the slow part — holding the lock there would serialize the
+        broker's ingest registration against in-flight decode)."""
+        with self._lock:
+            self._flushes += 1
+            if len(reqs) == 1:
+                _, key, batch, n = reqs[0]
+                plan = self._plans.get(key)
+                if plan is None:
+                    plan = self.session.prepare(
+                        batch, self._contents[key[0]].stream, n)
+                    self._plans[key] = plan
+                sym_off = None
+            else:
+                self._fused += 1
+                self._coalesced += len(reqs)
+                # Canonical request order: the fused layout is arrival-order
+                # independent, so any permutation of the same group shares
+                # one memo entry (tickets travel with their request; slices
+                # still land).
+                reqs.sort(key=lambda r: r[1])
+                group = tuple(key for _, key, _, _ in reqs)
+                hit = self._fused_plans.get(group)
+                if hit is None:
+                    if len(self._fused_plans) >= self.MAX_FUSED_PLANS:
+                        self._fused_plans.pop(next(iter(self._fused_plans)))
+                    plan, sym_off, total = self._prepare_fused(reqs)
+                    self._fused_plans[group] = (plan, sym_off, total)
+                else:
+                    plan, sym_off, total = hit
         out = self.session.execute(plan)
+        if sym_off is None:
+            reqs[0][0]._fulfill(out=out)
+            return
         for (ticket, _, _, n), off in zip(reqs, sym_off):
-            ticket.out = out[off:off + n]
+            ticket._fulfill(out=out[off:off + n])
 
     def _prepare_fused(self, reqs) -> tuple[DecodePlan, list[int], int]:
         streams: dict[int, DeviceStream] = {}
@@ -380,7 +478,8 @@ class DecodeService:
             fused_ds = next(iter(streams.values()))
             word_off = {id(fused_ds): 0}
         else:
-            fused_ds, word_off = _fuse_streams(list(streams.values()))
+            fused_ds, word_off = _fuse_streams(list(streams.values()),
+                                               self.session.executor)
         sym_off, total = [], 0
         for _, _, _, n in reqs:
             sym_off.append(total)
@@ -391,17 +490,55 @@ class DecodeService:
              for _, key, _, _ in reqs])
         return self.session.prepare(fused, fused_ds, total), sym_off, total
 
+    # ------------------------------------------------------------------
+    # Async serving pipeline (runtime.pipeline)
+    # ------------------------------------------------------------------
+
+    def start_pipeline(self, **broker_kw):
+        """Attach a :class:`~repro.runtime.pipeline.PipelineBroker` and
+        become its thin façade: ``submit``/``flush`` route through the
+        broker's capability lanes and worker threads, overlapping ingest
+        with decode traffic (DESIGN.md §8).  Returns the broker (also a
+        context manager)."""
+        from repro.runtime.pipeline import PipelineBroker
+        with self._lock:
+            if self._broker is not None:
+                raise RuntimeError("pipeline already running; stop it first")
+            # Requests queued through the sync path before the upgrade must
+            # dispatch NOW: once the broker is attached, flush() routes to
+            # broker.drain() and would never touch them (their tickets
+            # would strand as "never dispatched").
+            self._flush_pending()
+            self._broker = PipelineBroker(self, **broker_kw)
+        return self._broker
+
+    def stop_pipeline(self) -> None:
+        """Drain and detach the broker (no-op when none is attached)."""
+        with self._lock:
+            broker, self._broker = self._broker, None
+        if broker is not None:
+            broker.close()
+
+    @property
+    def broker(self):
+        return self._broker
+
     @property
     def stats(self) -> ServiceStats:
         e = self.session.stats
         enc = self._encoder.stats if self._encoder is not None else None
-        return ServiceStats(
-            compiles=e.compiles, cache_hits=e.cache_hits, decodes=e.decodes,
-            plan_hits=self._plan_hits, plan_misses=self._plan_misses,
-            coalesced_requests=self._coalesced, fused_dispatches=self._fused,
-            flushes=self._flushes, ingests=self._ingests,
-            encode_compiles=enc.compiles if enc else 0,
-            encode_fallbacks=enc.fallbacks if enc else 0)
+        with self._lock:
+            return ServiceStats(
+                compiles=e.compiles, cache_hits=e.cache_hits,
+                decodes=e.decodes,
+                plan_hits=self._plan_hits, plan_misses=self._plan_misses,
+                coalesced_requests=self._coalesced,
+                fused_dispatches=self._fused,
+                flushes=self._flushes, ingests=self._ingests,
+                encode_compiles=enc.compiles if enc else 0,
+                encode_fallbacks=enc.fallbacks if enc else 0,
+                host_materializations=getattr(
+                    self.session.executor, "host_materializations", 0))
 
 
 def _validate_content(model: StaticModel, plan: RecoilPlan, stream,
@@ -449,7 +586,8 @@ def _validate_content(model: StaticModel, plan: RecoilPlan, stream,
                 "than the service model — it would mis-decode")
 
 
-def _fuse_streams(streams: list[DeviceStream]) -> tuple[DeviceStream, dict]:
+def _fuse_streams(streams: list[DeviceStream],
+                  executor=None) -> tuple[DeviceStream, dict]:
     """Concatenate resident streams for a cross-content fused dispatch.
 
     Layout preserves each stream's padded bucket window, so word offsets are
@@ -471,9 +609,17 @@ def _fuse_streams(streams: list[DeviceStream]) -> tuple[DeviceStream, dict]:
         fused = DeviceStream(words=jnp.concatenate(parts), host=None,
                              n_words=total, bucket=bucket)
         return fused, word_off
+    # Mixed residency (pallas: uploaded streams are host-side, ingested
+    # ones device-only until lazily materialized) — pull device words down
+    # through the executor's per-handle materialization cache when it has
+    # one, so repeat fusions of the same handle don't re-copy and the
+    # ``host_materializations`` counter stays exact.
+    materialize = getattr(executor, "_host_words",
+                          lambda ds: (ds.host if ds.host is not None
+                                      else np.asarray(ds.words[:ds.n_words])))
     host = np.zeros(bucket, np.uint32)
     for ds in streams:
         host[word_off[id(ds)]:word_off[id(ds)] + ds.n_words] = \
-            ds.host.astype(np.uint32)
+            np.asarray(materialize(ds)).astype(np.uint32)
     fused = DeviceStream(words=None, host=host, n_words=total, bucket=bucket)
     return fused, word_off

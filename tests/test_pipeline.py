@@ -1,0 +1,452 @@
+"""Async serving pipeline: broker, controller, capability registry, metrics.
+
+Covers the DESIGN.md §8 contracts:
+
+  * controller unit behavior (EMA estimators, quantized batch sizing,
+    deadline flushes) with synthetic clocks — no threads, no jax;
+  * broker round trips: bit-exact results through the capability lanes,
+    0 recompiles after the enumerated shape warmup (including partial
+    groups, which pad to quantized sizes), admission-control backpressure;
+  * the threaded stress contract: concurrent ``submit`` during
+    ``ingest_batch`` across multiple contents is deadlock-free and
+    bit-exact vs the payloads (jnp here; the sharded backend runs the same
+    stress in a forced-4-device subprocess);
+  * lazy host materialization: pallas-impl ingest defers the device->host
+    stream copy to the first decode (latency-counter regression);
+  * capability registry: thinned plans/containers per declared client,
+    generation-based invalidation on re-ingest;
+  * the metrics instruments (LatencyWindow percentiles, OverlapClock).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import container, recoil
+from repro.core.rans import RansParams, StaticModel
+from repro.runtime.metrics import LatencyWindow, OverlapClock
+from repro.runtime.pipeline import (AdaptiveController, BrokerSaturated,
+                                    ControllerConfig)
+from repro.runtime.serve import DecodeService
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _payloads(n_contents=3, size=2048, seed=3):
+    rng = np.random.default_rng(seed)
+    return {f"c{i}": np.minimum(
+        rng.exponential(35.0, size=size).astype(np.int64), 255)
+        for i in range(n_contents)}
+
+
+def _service(payloads, n_splits=16, **kw):
+    model = StaticModel.from_symbols(
+        np.concatenate(list(payloads.values())), 256,
+        RansParams(n_bits=11, ways=32))
+    svc = DecodeService(model, **kw)
+    svc.ingest_batch(payloads, n_splits)
+    return svc
+
+
+# ----------------------------------------------------------------------
+# Metrics instruments
+# ----------------------------------------------------------------------
+
+def test_latency_window_percentiles():
+    w = LatencyWindow(size=100)
+    for ms in range(1, 101):               # 1..100 ms
+        w.record(ms * 1e-3)
+    assert w.count == 100
+    assert abs(w.percentile(50) - 0.0505) < 2e-3
+    s = w.summary_ms()
+    assert s["count"] == 100
+    assert 49 < s["p50_ms"] < 52
+    assert 94 < s["p95_ms"] < 97
+    assert 98 < s["p99_ms"] <= 100
+    assert abs(s["mean_ms"] - 50.5) < 1.0
+    assert LatencyWindow().summary_ms()["count"] == 0
+
+
+def test_latency_window_is_bounded():
+    w = LatencyWindow(size=8)
+    for _ in range(100):
+        w.record(1.0)
+    for _ in range(8):
+        w.record(2.0)                      # overwrite the whole ring
+    assert w.percentile(0) == 2.0
+    assert w.count == 108
+
+
+def test_overlap_clock_serial_vs_overlapped():
+    c = OverlapClock("a", "b")
+    c.begin("a"); time.sleep(0.02); c.end("a")
+    c.begin("b"); time.sleep(0.02); c.end("b")
+    assert c.ratio() < 0.2                 # serial: no overlap
+    c2 = OverlapClock("a", "b")
+    c2.begin("a")
+    c2.begin("b"); time.sleep(0.03); c2.end("b")
+    c2.end("a")
+    assert c2.ratio() > 0.8                # b fully inside a
+    snap = c2.snapshot()
+    assert snap["overlap_s"] <= snap["a_busy_s"] + 1e-6
+    assert 0.0 <= snap["overlap_ratio"] <= 1.0
+
+
+# ----------------------------------------------------------------------
+# Controller (pure, synthetic clock)
+# ----------------------------------------------------------------------
+
+def test_controller_quantize_and_sizes():
+    ctl = AdaptiveController(ControllerConfig(max_batch=8))
+    assert ctl.cfg.sizes() == (1, 2, 4, 8)
+    assert ctl.quantize(1) == 1
+    assert ctl.quantize(3) == 4
+    assert ctl.quantize(8) == 8
+    assert ctl.quantize(50) == 8           # clamped
+    ctl6 = AdaptiveController(ControllerConfig(max_batch=6))
+    assert ctl6.cfg.sizes() == (1, 2, 4, 6)
+
+
+def test_controller_targets_track_arrival_rate():
+    ctl = AdaptiveController(ControllerConfig(max_batch=8, ema_alpha=0.5))
+    ctl.observe_service(8, 8e-3)           # 8 ms per fused dispatch
+    t = 0.0
+    for _ in range(50):                    # 1000 req/s on lane 16
+        ctl.observe_arrival(16, t)
+        t += 1e-3
+    assert ctl.rate_hz(16, t) > 500
+    # 1000/s x 8 ms service -> 8 requests arrive per dispatch
+    assert ctl.target_batch(16, t) == 8
+    # a quiet lane decays: after 1 s of silence the open gap caps the rate
+    assert ctl.rate_hz(16, t + 1.0) <= 1.0 + 1e-6
+    assert ctl.target_batch(16, t + 1.0) == 1
+
+
+def test_controller_deadline_forces_partial_flush():
+    ctl = AdaptiveController(ControllerConfig(max_batch=8,
+                                              target_delay_ms=10.0))
+    ctl.observe_service(8, 50e-3)
+    t = 0.0
+    for _ in range(20):
+        ctl.observe_arrival(4, t)
+        t += 2e-3                          # 500/s * 50ms -> target 8+
+    d = ctl.decide(4, queued=3, oldest_wait_ms=2.0, now=t)
+    assert not d.dispatch and d.wait_more_ms <= 8.0
+    d = ctl.decide(4, queued=3, oldest_wait_ms=12.0, now=t)
+    assert d.dispatch and d.batch == 3     # deadline: take what's there
+    d = ctl.decide(4, queued=0, oldest_wait_ms=0.0, now=t)
+    assert not d.dispatch
+
+
+# ----------------------------------------------------------------------
+# Broker
+# ----------------------------------------------------------------------
+
+def test_broker_roundtrip_warm_zero_recompiles():
+    payloads = _payloads()
+    svc = _service(payloads)
+    with svc.start_pipeline(
+            config=ControllerConfig(max_batch=4, target_delay_ms=5.0)) as b:
+        b.warm(list(payloads), [4, 16])
+        before = svc.stats.compiles
+        tickets = []
+        for i in range(25):                # includes partial (odd) groups
+            name = f"c{i % 3}"
+            tickets.append((name, svc.submit(name, [4, 16][i % 2])))
+        b.drain()
+        for name, t in tickets:
+            assert (np.asarray(t.result()) == payloads[name]).all(), name
+        assert svc.stats.compiles == before, \
+            "post-warmup traffic must not compile (quantized group padding)"
+        snap = b.snapshot()
+        assert snap["queue_depth"] == 0
+        assert snap["completed"] == 25
+        assert snap["wait"]["count"] == 25
+        assert snap["service"]["p50_ms"] >= 0.0
+        assert snap["dispatch_errors"] == 0
+    assert svc.broker is None              # context exit detaches
+
+
+def test_broker_admission_backpressure():
+    payloads = _payloads(n_contents=1)
+    svc = _service(payloads)
+    # batch_sizes=(8,) + huge deadline: the worker cannot dispatch small
+    # queues, so the bound is hit deterministically.
+    b = svc.start_pipeline(
+        config=ControllerConfig(max_batch=8, batch_sizes=(8,),
+                                target_delay_ms=60_000.0),
+        max_queue=2)
+    try:
+        t1 = svc.submit("c0", 4)
+        t2 = svc.submit("c0", 4)
+        with pytest.raises(BrokerSaturated):
+            svc.submit("c0", 4)
+        assert b.snapshot()["rejected"] == 1
+    finally:
+        svc.stop_pipeline()                # close() flushes partial lanes
+    for t in (t1, t2):
+        assert (np.asarray(t.result(timeout=30)) == payloads["c0"]).all()
+
+
+def test_start_pipeline_flushes_sync_pending():
+    """Requests queued through the sync path BEFORE the upgrade must not
+    strand: start_pipeline dispatches them while attaching (regression —
+    broker-mode flush() never touches the sync pending queue)."""
+    payloads = _payloads(n_contents=1)
+    svc = _service(payloads, microbatch=8)   # group stays below the size
+    t_sync = svc.submit("c0", 4)
+    with svc.start_pipeline():
+        assert (np.asarray(t_sync.result()) == payloads["c0"]).all()
+        t_pipe = svc.submit("c0", 4)         # routed to the broker
+        assert (np.asarray(t_pipe.result(timeout=60))
+                == payloads["c0"]).all()
+
+
+def test_broker_rejects_unknown_content_and_closed_broker():
+    payloads = _payloads(n_contents=1)
+    svc = _service(payloads)
+    b = svc.start_pipeline()
+    try:
+        with pytest.raises(KeyError):
+            svc.submit("nope", 4)
+    finally:
+        svc.stop_pipeline()
+    with pytest.raises(RuntimeError):
+        b.submit("c0", 4)
+
+
+def test_broker_ingest_ticket_returns_plan_and_errors_propagate():
+    payloads = _payloads(n_contents=2)
+    svc = _service(payloads)
+    with svc.start_pipeline() as b:
+        t = b.submit_ingest("c9", payloads["c0"], 8)
+        plan = t.result(timeout=60)
+        assert isinstance(plan, recoil.RecoilPlan)
+        assert plan.n_threads >= 2
+        assert (np.asarray(svc.submit("c9", 8).result(timeout=60))
+                == payloads["c0"]).all()
+        # out-of-alphabet symbols: the ingest worker must deliver the
+        # validation error through the ticket, not die
+        bad = b.submit_ingest("evil", np.full(64, 255_000), 4)
+        with pytest.raises(ValueError):
+            bad.result(timeout=60)
+        assert b.snapshot()["ingest_errors"] == 1
+
+
+# ----------------------------------------------------------------------
+# Threaded stress (satellite): concurrent submit during ingest_batch
+# ----------------------------------------------------------------------
+
+STRESS_BODY = """
+    import numpy as np
+    import threading
+    from repro.core.rans import RansParams, StaticModel
+    from repro.runtime.serve import DecodeService
+    from repro.runtime.pipeline import BrokerSaturated, ControllerConfig
+
+    rng = np.random.default_rng(5)
+    payloads = {{f"c{{i}}": np.minimum(
+        rng.exponential(35.0, size=2048).astype(np.int64), 255)
+        for i in range(3)}}
+    model = StaticModel.from_symbols(
+        np.concatenate(list(payloads.values())), 256,
+        RansParams(n_bits=11, ways=32))
+    svc = DecodeService(model, impl={impl!r})
+    svc.ingest_batch(payloads, 16)
+    broker = svc.start_pipeline(
+        config=ControllerConfig(max_batch=4, target_delay_ms=5.0))
+    broker.warm(list(payloads), [4, 16])
+
+    errors = []
+    def refresher():
+        try:
+            for _ in range(6):   # re-ingest the same payloads continuously
+                for t in [broker.submit_ingest(n, payloads[n], 16)
+                          for n in payloads]:
+                    t.result(timeout=120)
+        except Exception as e:
+            errors.append(e)
+
+    results = []
+    def submitter(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(30):
+                name = f"c{{rng.integers(3)}}"
+                cap = [4, 16][rng.integers(2)]
+                while True:
+                    try:
+                        t = svc.submit(name, cap)
+                        break
+                    except BrokerSaturated:
+                        pass
+                results.append((name, t))
+        except Exception as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=refresher)] + [
+        threading.Thread(target=submitter, args=(s,)) for s in (1, 2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+        assert not t.is_alive(), "stress thread deadlocked"
+    assert not errors, errors
+    broker.drain(timeout=300)
+    for name, t in results:
+        out = np.asarray(t.result(timeout=120))
+        assert (out == payloads[name]).all(), name
+    assert len(results) == 60
+    snap = broker.snapshot()
+    assert snap["dispatch_errors"] == 0 and snap["ingest_errors"] == 0
+    assert 0.0 <= snap["overlap"]["overlap_ratio"] <= 1.0
+    assert snap["wait"]["count"] >= 60
+    svc.stop_pipeline()
+    print("OK")
+"""
+
+
+def test_threaded_stress_jnp():
+    """Concurrent submit during ingest_batch across 3 contents: deadlock-
+    free, every result bit-exact, clean error counters (in-process)."""
+    ns = {}
+    exec(textwrap.dedent(STRESS_BODY.format(impl="jnp")), ns)  # noqa: S102
+
+
+def test_threaded_stress_sharded_multidevice():
+    """The same stress contract on the sharded executor over 4 forced host
+    devices (subprocess: XLA flags must precede jax init)."""
+    code = ("import os\n"
+            "os.environ['XLA_FLAGS'] = "
+            "'--xla_force_host_platform_device_count=4'\n"
+            + textwrap.dedent(STRESS_BODY.format(impl="sharded"))
+            + "assert svc.session.executor.n_shards == 4\n")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": SRC}, timeout=900)
+    assert out.returncode == 0, (out.stderr[-3000:], out.stdout[-500:])
+    assert "OK" in out.stdout
+
+
+# ----------------------------------------------------------------------
+# Lazy host materialization (satellite)
+# ----------------------------------------------------------------------
+
+def test_pallas_ingest_defers_host_materialization():
+    """Ingest must NOT pay the device->host stream copy (latency counter
+    regression); the first pallas decode pays it exactly once."""
+    payloads = _payloads(n_contents=2, size=1536)
+    svc = _service(payloads, impl="pallas")
+    assert svc.stats.host_materializations == 0, \
+        "ingest paid the host copy it was supposed to defer"
+    assert svc.content("c0").stream.host is None   # still device-resident
+    out = np.asarray(svc.decode("c0", 4))
+    assert (out == payloads["c0"]).all()
+    assert svc.stats.host_materializations == 1
+    np.asarray(svc.decode("c0", 4))                # cached per live handle
+    assert svc.stats.host_materializations == 1
+    np.asarray(svc.decode("c1", 4))                # second handle pays once
+    assert svc.stats.host_materializations == 2
+
+
+def test_pallas_mixed_residency_fusion_uses_materialization_cache():
+    """A fused group mixing a host-registered stream with a device-only
+    ingested one must route the device->host copy through the executor's
+    per-handle cache: one copy per ingested handle, repeat fusions free."""
+    from repro.core.vectorized import encode_interleaved_fast
+
+    payloads = _payloads(n_contents=2, size=1536)
+    model = StaticModel.from_symbols(
+        np.concatenate(list(payloads.values())), 256,
+        RansParams(n_bits=11, ways=32))
+    svc = DecodeService(model, impl="pallas", microbatch=4)
+    svc.ingest("dev", payloads["c0"], 8)            # device-only stream
+    enc = encode_interleaved_fast(payloads["c1"], model)
+    svc.register("host", recoil.plan_splits(enc, 8), enc.stream,
+                 enc.final_states)                  # host-side stream
+    for _ in range(2):                              # second fusion: cached
+        t1, t2 = svc.submit("dev", 8), svc.submit("host", 8)
+        svc.flush()
+        assert (np.asarray(t1.result()) == payloads["c0"]).all()
+        assert (np.asarray(t2.result()) == payloads["c1"]).all()
+    assert svc.stats.host_materializations == 1
+
+
+def test_jnp_ingest_never_materializes_host():
+    payloads = _payloads(n_contents=1)
+    svc = _service(payloads)
+    np.asarray(svc.decode("c0", 4))
+    assert svc.stats.host_materializations == 0
+    assert svc.content("c0").stream.host is None
+
+
+# ----------------------------------------------------------------------
+# Capability registry (satellite: downscaled plans + containers)
+# ----------------------------------------------------------------------
+
+def test_capability_registry_downscaling_and_memo():
+    payloads = _payloads(n_contents=1, size=4096)
+    svc = _service(payloads, n_splits=32)
+    with svc.start_pipeline() as b:
+        reg = b.registry
+        reg.declare("phone", 2)
+        reg.declare("gpu", 32)
+        with pytest.raises(KeyError):
+            reg.plan_for("c0", "tv")       # undeclared client
+        with pytest.raises(ValueError):
+            reg.declare("bad", 0)
+        p_phone = reg.plan_for("c0", "phone")
+        p_gpu = reg.plan_for("c0", "gpu")
+        assert p_phone.n_threads == 2 and p_gpu.n_threads == 32
+        assert reg.plan_for("c0", "phone") is p_phone   # memoized
+        assert reg.snapshot()["memo_hits"] >= 1
+
+        buf_phone = reg.container_for("c0", "phone")
+        buf_gpu = reg.container_for("c0", "gpu")
+        assert len(buf_phone) < len(buf_gpu)   # thinner metadata on wire
+        pc = container.parse(buf_phone, svc.session.model.params)
+        out = recoil.decode_recoil(pc.plan, pc.stream, pc.final_states,
+                                   pc.model)
+        assert (out == payloads["c0"]).all()
+        assert pc.plan.n_threads == 2
+
+        # downscaled decode == full-parallelism decode, through the broker
+        full = np.asarray(svc.decode("c0", 32))
+        for client in ("phone", "gpu"):
+            t = reg.submit_for("c0", client)
+            b.drain()
+            assert (np.asarray(t.result(timeout=60)) == full).all()
+
+
+def test_capability_registry_invalidates_on_reingest():
+    payloads = _payloads(n_contents=1, size=4096)
+    svc = _service(payloads, n_splits=32)
+    with svc.start_pipeline() as b:
+        reg = b.registry
+        reg.declare("c", 4)
+        gen0 = svc.generation("c0")
+        p0 = reg.plan_for("c0", "c")
+        svc.ingest("c0", payloads["c0"], 32)   # refresh bumps generation
+        assert svc.generation("c0") == gen0 + 1
+        p1 = reg.plan_for("c0", "c")
+        assert p1 is not p0                    # stale memo not served
+        buf = reg.container_for("c0", "c")
+        pc = container.parse(buf, svc.session.model.params)
+        out = recoil.decode_recoil(pc.plan, pc.stream, pc.final_states,
+                                   pc.model)
+        assert (out == payloads["c0"]).all()
+        # refreshes overwrite memo entries instead of leaking one plan +
+        # one wire payload per generation (regression)
+        for _ in range(3):
+            svc.ingest("c0", payloads["c0"], 32)
+            reg.plan_for("c0", "c")
+            reg.container_for("c0", "c")
+        snap = reg.snapshot()
+        assert snap["plans_cached"] == 1
+        assert snap["containers_cached"] == 1
