@@ -328,8 +328,16 @@ def ingest_pipeline(sym_gw, active_gw, f_tab, F_tab, n_symbols, n_splits,
         k_of_word, ys, base, lr, masks, ccol_t, n_words, n_symbols, n_splits,
         ways=ways, splits_bucket=splits_bucket, window=window,
         expand_rounds=expand_rounds)
+    # Symbol-indexed stream layout (DESIGN.md §9): the pre-compaction (G, W)
+    # emission grid IS the permutation — entry (g, j) holds the word emitted
+    # at flat symbol index g*W + j, already in symbol order.  Emitting it
+    # here (masked, flattened) costs one select; the pointer-free decode
+    # walk gathers it directly and never needs the compacted offsets.
+    by_symbol = jnp.where(masks, words.astype(jnp.uint32),
+                          jnp.uint32(0)).reshape(-1)
     return {
         "stream": stream, "k_of_word": k_of_word, "y_of_word": y_of_word,
+        "by_symbol": by_symbol,
         "final_states": final, "n_words": n_words,
         "split_found": found, "split_q": q, "split_k": k, "split_y": y,
         "needs_expansion": needs_expansion, "overflow": overflow,

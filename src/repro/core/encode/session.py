@@ -264,9 +264,22 @@ class EncoderSession:
         # ingested and registered copies of like-sized contents share
         # decode executables and the padding tail stays bounded.
         from ..engine.plan import pow2_bucket
+        import jax.numpy as jnp
         bucket = min(words_bucket, pow2_bucket(n_words, 1024))
+        # The symbol-indexed permutation rides along (same residency-bucket
+        # discipline, floor 1024 so fused offsets stay group-aligned); the
+        # pipeline emits it at the padded group-grid length, sliced/padded
+        # here once per ingest.
+        sym_bucket = pow2_bucket(n_symbols, 1024)
+        by = out["by_symbol"]
+        if by.shape[0] >= sym_bucket:
+            by = by[:sym_bucket]
+        else:
+            by = jnp.concatenate(
+                [by, jnp.zeros(sym_bucket - by.shape[0], jnp.uint32)])
         ds = DeviceStream(words=out["stream"][:bucket], host=None,
-                          n_words=n_words, bucket=bucket)
+                          n_words=n_words, bucket=bucket,
+                          by_symbol=by, sym_bucket=sym_bucket)
         return IngestResult(stream=ds, plan=rplan,
                             final_states=np.asarray(out["final_states"]),
                             n_words=n_words)

@@ -22,13 +22,15 @@ Public API is re-exported here; ``from repro.core.engine import
 DecoderSession`` keeps working exactly as before the split.
 """
 
-from .plan import (DecodePlan, DeviceStream, concat_walk_batches,
-                   pad_split_arrays, pow2_bucket, work_bucket)
+from .plan import (DecodePlan, DeviceStream, LAYOUTS, concat_walk_batches,
+                   derive_symbol_layout, pad_split_arrays, pow2_bucket,
+                   with_symbol_layout, work_bucket)
 from .executors import Executor, JnpExecutor, PallasExecutor, make_executor
 from .session import DecoderSession, EngineStats
 
 __all__ = [
     "DecodePlan", "DeviceStream", "DecoderSession", "EngineStats",
-    "Executor", "JnpExecutor", "PallasExecutor", "concat_walk_batches",
-    "make_executor", "pad_split_arrays", "pow2_bucket", "work_bucket",
+    "Executor", "JnpExecutor", "LAYOUTS", "PallasExecutor",
+    "concat_walk_batches", "derive_symbol_layout", "make_executor",
+    "pad_split_arrays", "pow2_bucket", "with_symbol_layout", "work_bucket",
 ]

@@ -29,22 +29,56 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..rans import StaticModel
-from ..vectorized import WalkBatch, _walk_batch_jit
-from .plan import (DecodePlan, DeviceStream, SPLIT_FIELDS, pad_split_arrays,
-                   pow2_bucket, work_bucket)
+from ..vectorized import WalkBatch, _walk_batch_jit, _walk_batch_symbol_jit
+from .plan import (DecodePlan, DeviceStream, SPLIT_FIELDS,
+                   SYMBOL_SPLIT_FIELDS, pad_split_arrays, pow2_bucket,
+                   work_bucket)
 
 
 class Executor:
     """Backend contract (see module docstring).  ``luts`` is the session's
     device-resident slot-table tuple ``(sym_lut, f_lut, F_lut)`` — the last
-    two are None under the §4.4 packed layout."""
+    two are None under the §4.4 packed layout.
+
+    ``layout`` is the stream-layout policy (DESIGN.md §9): ``"auto"`` plans
+    the pointer-free symbol-indexed walk whenever the handle carries a
+    ``words_by_symbol`` permutation and falls back to the pointer walk
+    otherwise; ``"pointer"``/``"symbol"`` force one layout (``"symbol"``
+    raises on content registered without an emission log).  The selected
+    layout joins the plan key, so the two walks never share executables.
+    """
 
     impl: str = "?"
 
-    def __init__(self, model: StaticModel, packed_lut: bool, luts: tuple):
+    def __init__(self, model: StaticModel, packed_lut: bool, luts: tuple,
+                 layout: str = "auto"):
+        if layout not in ("auto", "pointer", "symbol"):
+            raise ValueError(f"unknown layout policy {layout!r}")
         self.model = model
         self.packed_lut = packed_lut
         self.luts = luts
+        self.layout = layout
+        # Per-layout plan counts (observability; picked up by ServiceStats).
+        # plan() may run from any thread (the broker's workers and direct
+        # session users), so bumps go through _count_layout's lock.
+        self.layout_plans = {"pointer": 0, "symbol": 0}
+        self._layout_lock = threading.Lock()
+
+    def _count_layout(self, layout: str) -> None:
+        with self._layout_lock:
+            self.layout_plans[layout] += 1
+
+    def select_layout(self, ds: DeviceStream) -> str:
+        """The layout this request will run under (policy x availability)."""
+        if self.layout == "pointer":
+            return "pointer"
+        if ds.by_symbol is None:
+            if self.layout == "symbol":
+                raise ValueError(
+                    "layout='symbol' requires content registered with an "
+                    "emission log (DeviceStream.by_symbol is None)")
+            return "pointer"
+        return "symbol"
 
     def upload_stream(self, stream: np.ndarray) -> DeviceStream:
         """Default: host-side registration only (backends that never read
@@ -64,13 +98,27 @@ class Executor:
         raise NotImplementedError
 
 
+def _check_sym_alignment(batch: WalkBatch, ds: DeviceStream, W: int) -> None:
+    """Loud host-side guards for the symbol layout: the walk gathers whole
+    W-wide groups, so every permutation base must be group-aligned, and the
+    permutation bucket must hold whole groups."""
+    bases = batch.sym_bases()
+    if bases.size and np.any(bases % W):
+        raise ValueError("sym_base entries must be multiples of ways for "
+                         "the symbol-indexed layout")
+    if ds.sym_bucket % W:
+        raise ValueError(
+            f"sym_bucket={ds.sym_bucket} is not a multiple of ways={W}")
+
+
 class JnpExecutor(Executor):
     """XLA walk over the full device-resident stream."""
 
     impl = "jnp"
 
-    def __init__(self, model: StaticModel, packed_lut: bool, luts: tuple):
-        super().__init__(model, packed_lut, luts)
+    def __init__(self, model: StaticModel, packed_lut: bool, luts: tuple,
+                 layout: str = "auto"):
+        super().__init__(model, packed_lut, luts, layout)
         # Cross-impl handle fix: a DeviceStream registered by a backend that
         # skips the full-stream upload (words=None) used to be re-uploaded
         # on EVERY decode.  The upgrade is cached here keyed by handle id,
@@ -117,28 +165,43 @@ class JnpExecutor(Executor):
 
     def plan(self, batch: WalkBatch, ds: DeviceStream,
              n_symbols: int) -> DecodePlan:
-        ds = self.resident(ds)
+        layout = self.select_layout(ds)
+        self._count_layout(layout)
         p = self.model.params
         W = batch.ways
         s_b = self._split_bucket(batch.k.shape[0])
         steps_b = work_bucket(batch.n_steps)
         out_b = pow2_bucket(n_symbols)
         arrs = pad_split_arrays(batch, s_b)
-        key = (self.impl, self.packed_lut, p.n_bits, W, s_b, steps_b,
-               ds.bucket, out_b)
-        args = (ds.words, *self.luts,
-                *(arrs[f] for f in SPLIT_FIELDS))
         statics = dict(n_bits=p.n_bits, ways=W, n_steps=steps_b,
                        n_symbols=out_b)
+        if layout == "symbol":
+            _check_sym_alignment(batch, ds, W)
+            key = (self.impl, layout, self.packed_lut, p.n_bits, W, s_b,
+                   steps_b, ds.sym_bucket, out_b)
+            args = (ds.by_symbol, *self.luts,
+                    *(arrs[f] for f in SYMBOL_SPLIT_FIELDS))
+        else:
+            ds = self.resident(ds)
+            key = (self.impl, layout, self.packed_lut, p.n_bits, W, s_b,
+                   steps_b, ds.bucket, out_b)
+            args = (ds.words, *self.luts,
+                    *(arrs[f] for f in SPLIT_FIELDS))
         return DecodePlan(key=key, args=args, statics=statics,
-                          n_symbols=n_symbols, out_bucket=out_b)
+                          n_symbols=n_symbols, out_bucket=out_b,
+                          layout=layout)
 
     def lower(self, plan: DecodePlan):
-        return _walk_batch_jit.lower(
+        jitted = (_walk_batch_symbol_jit if plan.layout == "symbol"
+                  else _walk_batch_jit)
+        return jitted.lower(
             *plan.args, **plan.statics, ctx_of_index=None).compile()
 
     def run(self, exe, plan: DecodePlan) -> jax.Array:
-        out, _qf = exe(*plan.args, ctx_of_index=None)
+        res = exe(*plan.args, ctx_of_index=None)
+        if plan.layout == "symbol":
+            return res
+        out, _qf = res
         return out
 
 
@@ -149,8 +212,9 @@ class PallasExecutor(Executor):
     impl = "pallas"
 
     def __init__(self, model: StaticModel, packed_lut: bool, luts: tuple, *,
-                 interpret: bool = True, rows_per_block: int = 8):
-        super().__init__(model, packed_lut, luts)
+                 interpret: bool = True, rows_per_block: int = 8,
+                 layout: str = "auto"):
+        super().__init__(model, packed_lut, luts, layout)
         self.interpret = interpret
         self.rows_per_block = rows_per_block
         # Lazy host materialization for device-resident (ingested / fused)
@@ -158,50 +222,95 @@ class PallasExecutor(Executor):
         # to the FIRST plan against the handle — ingest latency never pays
         # it, and jnp/sharded decodes of the same handle never trigger it.
         # Same weakref-identity cache discipline as JnpExecutor's upgrade
-        # cache (a recycled id can never serve stale words).
-        self._host_cache: dict[int, tuple[weakref.ref, np.ndarray]] = {}
+        # cache (a recycled id can never serve stale words).  Keys carry the
+        # field name: the symbol layout lazily materializes ``by_symbol``
+        # through the same cache.
+        self._host_cache: dict[tuple, tuple[weakref.ref, np.ndarray]] = {}
         self._cache_lock = threading.Lock()   # guards cache + prune + count
         self.host_materializations = 0
+
+    def _host_arr(self, ds: DeviceStream, field: str,
+                  device_arr, n: int) -> np.ndarray:
+        with self._cache_lock:
+            hit = self._host_cache.get((id(ds), field))
+            if hit is not None and hit[0]() is ds:
+                return hit[1]
+            host = np.ascontiguousarray(np.asarray(device_arr[:n]))
+            self.host_materializations += 1
+            if len(self._host_cache) > 512:   # prune dead handles
+                for key in [k for k, (ref, _) in self._host_cache.items()
+                            if ref() is None]:
+                    del self._host_cache[key]
+            self._host_cache[(id(ds), field)] = (weakref.ref(ds), host)
+            return host
 
     def _host_words(self, ds: DeviceStream) -> np.ndarray:
         if ds.host is not None:
             return ds.host
         if ds.words is None:
             raise ValueError("DeviceStream has neither host nor device words")
-        with self._cache_lock:
-            hit = self._host_cache.get(id(ds))
-            if hit is not None and hit[0]() is ds:
-                return hit[1]
-            host = np.ascontiguousarray(np.asarray(ds.words[:ds.n_words]))
-            self.host_materializations += 1
-            if len(self._host_cache) > 512:   # prune dead handles
-                for key in [k for k, (ref, _) in self._host_cache.items()
-                            if ref() is None]:
-                    del self._host_cache[key]
-            self._host_cache[id(ds)] = (weakref.ref(ds), host)
-            return host
+        return self._host_arr(ds, "words", ds.words, ds.n_words)
+
+    def _host_by_symbol(self, ds: DeviceStream) -> np.ndarray:
+        return self._host_arr(ds, "by_symbol", ds.by_symbol, ds.sym_bucket)
 
     def plan(self, batch: WalkBatch, ds: DeviceStream,
              n_symbols: int) -> DecodePlan:
         from repro.kernels.rans_decode.ops import (build_slabs, pack_batch,
                                                    pad_to_rows)
-        host_words = self._host_words(ds)
+        layout = self.select_layout(ds)
+        self._count_layout(layout)
         p = self.model.params
         W = batch.ways
         rpb = self.rows_per_block
         packed, per_split, rows, pack, _ = pack_batch(batch)
         rows = pad_to_rows(packed, per_split, rows, pack,
                            work_bucket(-(-rows // rpb)) * rpb)
+        steps_b = work_bucket(batch.n_steps)
+        out_b = pow2_bucket(n_symbols)
+        statics = dict(n_bits=p.n_bits, ways=W, n_steps=steps_b,
+                       rows_per_block=rpb, interpret=self.interpret,
+                       pack=pack, n_symbols=out_b)
+        if layout == "symbol":
+            _check_sym_alignment(batch, ds, W)
+            # Per-block slab of the PERMUTATION: rows gather symbol indices
+            # in [stop + sym_base, start + sym_base], so reuse the q0-window
+            # slab builder with hi = start + sym_base, span = start - stop
+            # (+1 slack below; the builder already clamps at 0).
+            win = dict(q0=per_split["start"] + per_split["sym_base"],
+                       span=per_split["span"])
+            slabs, slab_lo = build_slabs(self._host_by_symbol(ds), win,
+                                         rows, pack, rpb)
+            slab_b = pow2_bucket(slabs.shape[1], 8)
+            if slab_b > slabs.shape[1]:
+                slabs = np.pad(slabs, ((0, 0), (0, slab_b - slabs.shape[1])))
+            lo_rows = np.repeat(slab_lo, rpb * pack).astype(np.int32)
+            sym_rel = per_split["sym_base"] - lo_rows
+            sym_rel_packed = np.ascontiguousarray(
+                np.repeat(sym_rel.reshape(-1, pack), W, axis=1))
+            key = (self.impl, layout, self.packed_lut, p.n_bits, W, rows,
+                   steps_b, slab_b, out_b, rpb, self.interpret)
+            args = (jnp.asarray(slabs), *self.luts,
+                    jnp.asarray(packed["k"]), jnp.asarray(packed["y"]),
+                    jnp.asarray(packed["x0"]), jnp.asarray(sym_rel_packed),
+                    jnp.asarray(packed["g_hi"]), jnp.asarray(packed["start"]),
+                    jnp.asarray(packed["stop"]),
+                    jnp.asarray(packed["keep_lo"]),
+                    jnp.asarray(packed["keep_hi"]),
+                    jnp.asarray(per_split["g_hi"]),
+                    jnp.asarray(per_split["out_base"]))
+            return DecodePlan(key=key, args=args, statics=statics,
+                              n_symbols=n_symbols, out_bucket=out_b,
+                              layout=layout)
+        host_words = self._host_words(ds)
         slabs, slab_lo = build_slabs(host_words, per_split, rows, pack, rpb)
         slab_b = pow2_bucket(slabs.shape[1], 8)
         if slab_b > slabs.shape[1]:
             slabs = np.pad(slabs, ((0, 0), (0, slab_b - slabs.shape[1])))
-        steps_b = work_bucket(batch.n_steps)
-        out_b = pow2_bucket(n_symbols)
         lo_rows = np.repeat(slab_lo, rpb).astype(np.int32)
         q0_rel = packed["q0"] - lo_rows[:, None]
-        key = (self.impl, self.packed_lut, p.n_bits, W, rows, steps_b,
-               slab_b, out_b, rpb, self.interpret)
+        key = (self.impl, layout, self.packed_lut, p.n_bits, W, rows,
+               steps_b, slab_b, out_b, rpb, self.interpret)
         args = (jnp.asarray(slabs), *self.luts,
                 jnp.asarray(packed["k"]), jnp.asarray(packed["y"]),
                 jnp.asarray(packed["x0"]), jnp.asarray(q0_rel),
@@ -210,15 +319,16 @@ class PallasExecutor(Executor):
                 jnp.asarray(packed["keep_hi"]),
                 jnp.asarray(per_split["g_hi"]),
                 jnp.asarray(per_split["out_base"]))
-        statics = dict(n_bits=p.n_bits, ways=W, n_steps=steps_b,
-                       rows_per_block=rpb, interpret=self.interpret,
-                       pack=pack, n_symbols=out_b)
         return DecodePlan(key=key, args=args, statics=statics,
-                          n_symbols=n_symbols, out_bucket=out_b)
+                          n_symbols=n_symbols, out_bucket=out_b,
+                          layout=layout)
 
     def lower(self, plan: DecodePlan):
-        from repro.kernels.rans_decode.ops import decode_tiles_fused
-        return decode_tiles_fused.lower(*plan.args, **plan.statics).compile()
+        from repro.kernels.rans_decode.ops import (decode_tiles_fused,
+                                                   decode_tiles_fused_symbol)
+        fn = (decode_tiles_fused_symbol if plan.layout == "symbol"
+              else decode_tiles_fused)
+        return fn.lower(*plan.args, **plan.statics).compile()
 
     def run(self, exe, plan: DecodePlan) -> jax.Array:
         return exe(*plan.args)
@@ -226,13 +336,15 @@ class PallasExecutor(Executor):
 
 def make_executor(impl: str, model: StaticModel, packed_lut: bool,
                   luts: tuple, *, interpret: bool = True,
-                  rows_per_block: int = 8, mesh=None) -> Executor:
+                  rows_per_block: int = 8, mesh=None,
+                  layout: str = "auto") -> Executor:
     if impl == "jnp":
-        return JnpExecutor(model, packed_lut, luts)
+        return JnpExecutor(model, packed_lut, luts, layout)
     if impl == "pallas":
         return PallasExecutor(model, packed_lut, luts, interpret=interpret,
-                              rows_per_block=rows_per_block)
+                              rows_per_block=rows_per_block, layout=layout)
     if impl == "sharded":
         from repro.parallel.decode_shard import ShardedExecutor
-        return ShardedExecutor(model, packed_lut, luts, mesh=mesh)
+        return ShardedExecutor(model, packed_lut, luts, mesh=mesh,
+                               layout=layout)
     raise ValueError(f"unknown impl {impl!r}")

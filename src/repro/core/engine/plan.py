@@ -37,6 +37,7 @@ fused stream, when requests target different contents).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import jax
@@ -44,6 +45,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..vectorized import WalkBatch
+
+#: Plan-IR layout axis (DESIGN.md §9).  ``pointer`` is the classic Recoil
+#: walk (sequential stream pointer + per-step renormalization cumsum);
+#: ``symbol`` is the pointer-free walk over the ``words_by_symbol``
+#: permutation.  Joins every executable-cache key.
+LAYOUTS = ("pointer", "symbol")
 
 
 def pow2_bucket(n: int, floor: int = 1) -> int:
@@ -74,12 +81,22 @@ class DeviceStream:
     slab build, which uploads per-block slabs instead); backends that read
     the whole stream on device (jnp, sharded) fill ``words``.  ``host`` may
     be None for fused device-side streams built by the microbatcher.
+
+    ``by_symbol`` is the symbol-indexed permutation of the same words
+    (DESIGN.md §9): entry ``i`` is the word emitted at flat symbol index
+    ``i`` (0 where symbol ``i`` emitted nothing), padded to ``sym_bucket``.
+    It exists only for content whose emission log was available at
+    ingest/register time; ``None`` keeps the handle on the pointer-walk
+    fallback.  The wire format never carries it — it is derived, and the
+    stream words themselves are bit-identical either way.
     """
 
     words: jax.Array | None   # uint32[bucket], zero-padded tail
     host: np.ndarray | None   # uint16/uint32[n_words] — original words
     n_words: int
     bucket: int
+    by_symbol: jax.Array | None = None   # uint32[sym_bucket]
+    sym_bucket: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +113,7 @@ class DecodePlan:
     statics: dict
     n_symbols: int
     out_bucket: int
+    layout: str = "pointer"   # plan-IR layout axis (see LAYOUTS)
 
 
 def pad_split_arrays(batch: WalkBatch, s_bucket: int) -> dict[str, jax.Array]:
@@ -120,23 +138,35 @@ def pad_split_arrays(batch: WalkBatch, s_bucket: int) -> dict[str, jax.Array]:
         "keep_lo": grow(batch.keep_lo, np.int32(0)),
         "keep_hi": grow(batch.keep_hi, np.int32(0)),
         "out_base": grow(batch.out_base.astype(np.int32), np.int32(0)),
+        "sym_base": grow(batch.sym_bases(), np.int32(0)),
     }
 
 
 SPLIT_FIELDS = ("k", "y", "x0", "q0", "g_hi", "start", "stop",
                 "keep_lo", "keep_hi", "out_base")
 
+# The symbol-indexed walk drops ``q0`` from the argument list (there is no
+# stream pointer) and gains the per-row permutation base.  Field order
+# matches ``vectorized._walk_batch_symbol_impl``.
+SYMBOL_SPLIT_FIELDS = ("k", "y", "x0", "sym_base", "g_hi", "start", "stop",
+                       "keep_lo", "keep_hi", "out_base")
+
 
 def concat_walk_batches(batches: Sequence[WalkBatch],
                         sym_offsets: Sequence[int],
-                        word_offsets: Sequence[int] | None = None) -> WalkBatch:
+                        word_offsets: Sequence[int] | None = None,
+                        perm_offsets: Sequence[int] | None = None) -> WalkBatch:
     """Fuse N WalkBatches into one (microbatch coalescing).
 
     Request i's rows write output window ``[sym_offsets[i], ...)`` (its
     ``out_base`` shifts by the offset) and, when ``word_offsets`` is given,
     read stream window starting at ``word_offsets[i]`` of a fused stream
-    (its ``q0`` shifts).  Rows stay per-request-inert exactly as before;
-    the fused walk runs max(n_steps) scan steps for every row.
+    (its ``q0`` shifts).  ``perm_offsets`` is the symbol-layout analogue:
+    request i's rows gather from window ``perm_offsets[i]`` of a fused
+    ``words_by_symbol`` permutation (its ``sym_base`` shifts; offsets must
+    be multiples of ``ways`` — they are sym-bucket-aligned in practice).
+    Rows stay per-request-inert exactly as before; the fused walk runs
+    max(n_steps) scan steps for every row.
     """
     ways = {b.ways for b in batches}
     if len(ways) != 1:
@@ -144,6 +174,8 @@ def concat_walk_batches(batches: Sequence[WalkBatch],
     W = ways.pop()
     if word_offsets is None:
         word_offsets = [0] * len(batches)
+    if perm_offsets is None:
+        perm_offsets = [0] * len(batches)
 
     def cat(field: str) -> np.ndarray:
         return np.concatenate([getattr(b, field) for b in batches])
@@ -162,9 +194,73 @@ def concat_walk_batches(batches: Sequence[WalkBatch],
          for b, o in zip(batches, word_offsets)])
     if len(q0) and int(q0.max()) >= 2 ** 31:
         raise ValueError("fused stream index exceeds int32")
+    if any(int(o) % W for o in perm_offsets):
+        raise ValueError(
+            f"perm_offsets must be multiples of ways={W} (the symbol walk "
+            "gathers whole groups)")
+    sym_base = np.concatenate(
+        [b.sym_bases().astype(np.int64) + int(o)
+         for b, o in zip(batches, perm_offsets)])
+    if len(sym_base) and int(sym_base.max()) >= 2 ** 31:
+        raise ValueError("fused permutation index exceeds int32")
     return WalkBatch(
         k=cat("k"), y=cat("y"), x0=cat("x0"), q0=q0.astype(np.int32),
         g_hi=cat("g_hi"), start=cat("start"), stop=cat("stop"),
         keep_lo=cat("keep_lo"), keep_hi=keep_hi,
         out_base=out_base.astype(np.int32),
-        n_steps=max(b.n_steps for b in batches), ways=W)
+        n_steps=max(b.n_steps for b in batches), ways=W,
+        sym_base=sym_base.astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Symbol-indexed layout derivation (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("sym_bucket",))
+def derive_symbol_layout(words: jax.Array, k_of_word: jax.Array, *,
+                         sym_bucket: int) -> jax.Array:
+    """``words_by_symbol`` from a compacted stream + emission log, on device.
+
+    ``k_of_word`` is sorted ascending (emission order is ascending flat
+    symbol index) with an int32-max padding tail, so the inverse of the
+    compaction's offset->symbol select is gather-only: ``offset_of(i) =
+    searchsorted(k_of_word, i)``, a hit iff ``k_of_word[offset] == i``.
+    Symbols with no emission get 0 (the walk never reads them).
+    """
+    cap = k_of_word.shape[0]
+    i = jnp.arange(sym_bucket, dtype=k_of_word.dtype)
+    q = jnp.clip(jnp.searchsorted(k_of_word, i, side="left"), 0, cap - 1)
+    hit = k_of_word[q] == i
+    return jnp.where(hit, words[q].astype(jnp.uint32), jnp.uint32(0))
+
+
+def with_symbol_layout(ds: DeviceStream, k_of_word: np.ndarray,
+                       n_symbols: int) -> DeviceStream:
+    """Attach the symbol-indexed permutation to a stream handle.
+
+    ``k_of_word`` is the content's emission log (one flat symbol index per
+    stream word, ascending).  Device-resident handles derive the permutation
+    on device; host-only handles (Pallas registration) derive it on host and
+    upload.  The returned handle replaces ``ds`` everywhere — the original
+    words are untouched (the wire format does not change).
+    """
+    kw = np.asarray(k_of_word, np.int64).ravel()
+    if kw.size != ds.n_words:
+        raise ValueError(
+            f"emission log covers {kw.size} words but the stream has "
+            f"{ds.n_words}")
+    if kw.size and (int(kw.min()) < 0 or int(kw.max()) >= n_symbols):
+        raise ValueError("emission log indexes outside [0, n_symbols)")
+    if np.any(np.diff(kw) <= 0):
+        raise ValueError("emission log must be strictly ascending")
+    sym_bucket = pow2_bucket(n_symbols, 1024)
+    if ds.words is not None:
+        kpad = np.full(ds.bucket, np.iinfo(np.int32).max, np.int32)
+        kpad[:kw.size] = kw.astype(np.int32)
+        by = derive_symbol_layout(ds.words, jnp.asarray(kpad),
+                                  sym_bucket=sym_bucket)
+    else:
+        host = np.zeros(sym_bucket, np.uint32)
+        host[kw] = np.ascontiguousarray(ds.host).astype(np.uint32)
+        by = jnp.asarray(host)
+    return dataclasses.replace(ds, by_symbol=by, sym_bucket=sym_bucket)

@@ -57,11 +57,17 @@ class DecoderSession:
     (multi-device shard_map over split rows; pass ``mesh=`` or the executor
     builds a 1-D mesh over every visible device).  ``packed_lut`` defaults
     to auto: the §4.4 packed table whenever the model fits it.
+
+    ``layout`` is the stream-layout policy (DESIGN.md §9): ``"auto"``
+    (default) runs the pointer-free symbol-indexed walk for handles that
+    carry a ``words_by_symbol`` permutation and the classic pointer walk
+    otherwise; ``"pointer"``/``"symbol"`` force one layout.  The layout
+    joins the executable-cache key, so the walks never share executables.
     """
 
     def __init__(self, model: StaticModel, *, impl: str = "jnp",
                  packed_lut: bool | None = None, interpret: bool = True,
-                 rows_per_block: int = 8, mesh=None):
+                 rows_per_block: int = 8, mesh=None, layout: str = "auto"):
         if impl not in ("jnp", "pallas", "sharded"):
             raise ValueError(f"unknown impl {impl!r}")
         from repro.kernels.rans_decode.ops import _luts, packed_lut_ok
@@ -76,7 +82,7 @@ class DecoderSession:
         self._luts = _luts(model, packed_lut)
         self.executor = make_executor(
             impl, model, packed_lut, self._luts, interpret=interpret,
-            rows_per_block=rows_per_block, mesh=mesh)
+            rows_per_block=rows_per_block, mesh=mesh, layout=layout)
         self._exec: dict[tuple, object] = {}
         self._lock = threading.Lock()   # guards _exec + stats (see header)
         self.stats = EngineStats()

@@ -102,6 +102,12 @@ class WalkBatch:
 
     ``g_hi[m]`` is split m's top group, the scan iterates g = g_hi - t for
     t in [0, n_steps); rows with g < g_lo are inactive padding.
+
+    ``sym_base`` only matters to the symbol-indexed stream layout (DESIGN.md
+    §9): row m's walk gathers ``words_by_symbol[i + sym_base[m]]``, so it is
+    0 for a standalone content and shifts to the content's window when
+    requests fuse over a concatenated permutation.  The pointer layout
+    ignores it (``q0`` plays the analogous role there).
     """
 
     k: np.ndarray        # int32[S, W]
@@ -116,6 +122,13 @@ class WalkBatch:
     out_base: np.ndarray  # int32[S] — global output offset (conventional adapter)
     n_steps: int
     ways: int
+    sym_base: np.ndarray | None = None  # int32[S] — words_by_symbol gather base
+
+    def sym_bases(self) -> np.ndarray:
+        """``sym_base`` with the zero default materialized."""
+        if self.sym_base is None:
+            return np.zeros(self.k.shape[0], np.int32)
+        return self.sym_base
 
     @classmethod
     def from_splits(cls, splits: list[SplitState], ways: int,
@@ -152,6 +165,50 @@ class WalkBatch:
             out_base=out_base, n_steps=n_steps, ways=ways)
 
 
+def _slot_decode(sym_lut: jax.Array, f_lut: jax.Array | None,
+                 F_lut: jax.Array | None, slot: jax.Array, i: jax.Array,
+                 ctx_of_index: jax.Array | None):
+    """slot -> (symbol, f, F) under the three table layouts — §4.4 packed
+    single-int32 (one gather, bitwise unpack: sym[0:8] | f[8:20] | F[20:32];
+    requires n <= 12, 8-bit symbols), split static tables, or adaptive
+    per-context tables keyed by the walk index ``i``.  Shared by the
+    pointer and symbol-layout walks so the bit layout lives in ONE place
+    (the Pallas kernels' ref-based twin is ``_kernel_slot_decode``)."""
+    if ctx_of_index is None and f_lut is None:
+        packed = sym_lut[slot].astype(jnp.uint32)
+        s = (packed & jnp.uint32(0xFF)).astype(jnp.int32)
+        fs = (packed >> jnp.uint32(8)) & jnp.uint32(0xFFF)
+        Fs = (packed >> jnp.uint32(20)) & jnp.uint32(0xFFF)
+    elif ctx_of_index is None:
+        s = sym_lut[slot]
+        fs = f_lut[slot].astype(jnp.uint32)
+        Fs = F_lut[slot].astype(jnp.uint32)
+    else:
+        c = ctx_of_index[jnp.clip(i, 0, ctx_of_index.shape[0] - 1)]
+        s = sym_lut[c, slot]
+        fs = f_lut[c, slot].astype(jnp.uint32)
+        Fs = F_lut[c, slot].astype(jnp.uint32)
+    return s, fs, Fs
+
+
+def _scatter_kept(syms: jax.Array, keeps: jax.Array, g_hi: jax.Array,
+                  out_base: jax.Array, *, ways: int, n_steps: int,
+                  n_symbols: int) -> jax.Array:
+    """Closed-form output scatter shared by both walk layouts.  Kept
+    positions are unique by construction (disjoint [keep_lo, keep_hi)
+    ranges) and dropped lanes are routed to index n_symbols — out of
+    bounds, removed by ``mode="drop"`` — so unique_indices=True is honest
+    and unlocks the faster lowering."""
+    lanes = jnp.arange(ways, dtype=jnp.int32)
+    t = jnp.arange(n_steps, dtype=jnp.int32)
+    g = g_hi[:, None, None] - t[None, :, None]
+    i = (g * ways + lanes[None, None, :]) + out_base[:, None, None]
+    i = jnp.where(keeps, i, n_symbols)
+    out = jnp.full((n_symbols,), -1, dtype=jnp.int32)
+    return out.at[i.reshape(-1)].set(syms.reshape(-1).astype(jnp.int32),
+                                     mode="drop", unique_indices=True)
+
+
 def _walk_one_split(stream: jax.Array, sym_lut: jax.Array, f_lut: jax.Array,
                     F_lut: jax.Array, k: jax.Array, y: jax.Array, x0: jax.Array,
                     q0: jax.Array, g_hi: jax.Array, start: jax.Array,
@@ -174,22 +231,7 @@ def _walk_one_split(stream: jax.Array, sym_lut: jax.Array, f_lut: jax.Array,
         recon = active & (i == k32)
         dec = active & (i < k32)
         slot = (x & slot_mask).astype(jnp.int32)
-        if ctx_of_index is None and f_lut is None:
-            # packed LUT (paper §4.4): one gather, bitwise unpack —
-            # sym[0:8] | f[8:20] | F[20:32]; requires n <= 12, 8-bit symbols
-            packed = sym_lut[slot].astype(jnp.uint32)
-            s = (packed & jnp.uint32(0xFF)).astype(jnp.int32)
-            fs = (packed >> jnp.uint32(8)) & jnp.uint32(0xFFF)
-            Fs = (packed >> jnp.uint32(20)) & jnp.uint32(0xFFF)
-        elif ctx_of_index is None:
-            s = sym_lut[slot]
-            fs = f_lut[slot].astype(jnp.uint32)
-            Fs = F_lut[slot].astype(jnp.uint32)
-        else:
-            c = ctx_of_index[jnp.clip(i, 0, ctx_of_index.shape[0] - 1)]
-            s = sym_lut[c, slot]
-            fs = f_lut[c, slot].astype(jnp.uint32)
-            Fs = F_lut[c, slot].astype(jnp.uint32)
+        s, fs, Fs = _slot_decode(sym_lut, f_lut, F_lut, slot, i, ctx_of_index)
         x_dec = fs * (x >> np.uint32(n_bits)) + (slot.astype(jnp.uint32) - Fs)
         under = x_dec < L
         reads = recon | (dec & under)
@@ -221,19 +263,8 @@ def _walk_batch_impl(stream, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi, start,
                              ctx_of_index=ctx_of_index)
     syms, keeps, qf = jax.vmap(walk)(k, y, x0, q0, g_hi, start, stop,
                                      keep_lo, keep_hi)
-    # Scatter kept symbols into the global output.  Kept positions are unique
-    # by construction (disjoint [keep_lo, keep_hi) ranges) and dropped lanes
-    # are routed to index n_symbols — out of bounds, removed by mode="drop" —
-    # so unique_indices=True is honest and unlocks the faster lowering.
-    S = k.shape[0]
-    lanes = jnp.arange(ways, dtype=jnp.int32)
-    t = jnp.arange(n_steps, dtype=jnp.int32)
-    g = g_hi[:, None, None] - t[None, :, None]
-    i = (g * ways + lanes[None, None, :]) + out_base[:, None, None]
-    i = jnp.where(keeps, i, n_symbols)
-    out = jnp.full((n_symbols,), -1, dtype=jnp.int32)
-    out = out.at[i.reshape(-1)].set(syms.reshape(-1).astype(jnp.int32),
-                                    mode="drop", unique_indices=True)
+    out = _scatter_kept(syms, keeps, g_hi, out_base, ways=ways,
+                        n_steps=n_steps, n_symbols=n_symbols)
     return out, qf
 
 
@@ -243,6 +274,170 @@ def _walk_batch_impl(stream, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi, start,
 _walk_batch_jit = jax.jit(
     _walk_batch_impl,
     static_argnames=("n_bits", "ways", "n_steps", "n_symbols"))
+
+
+# ---------------------------------------------------------------------------
+# Symbol-indexed stream layout (DESIGN.md §9): pointer-free walk
+# ---------------------------------------------------------------------------
+#
+# The emission-log bijection (interleaved.py header): the word at stream
+# offset q is consumed by the renorm-read that follows the decode of symbol
+# k_of_word[q] — and recon reads at i == k[j] consume the word emitted at
+# k[j] (the split metadata's k[j] IS an emission).  So every read the walk
+# ever issues while processing symbol i fetches stream[offset_of_emission(i)].
+# Pre-permuting the stream into ``words_by_symbol[i]`` therefore lets each
+# lane gather its word by its own symbol index: the sequential stream
+# pointer q and the per-step cross-lane renormalization cumsum both leave
+# the carry, which shrinks to just the W rANS states.
+
+
+def words_by_symbol_host(stream: np.ndarray, k_of_word: np.ndarray,
+                         n_symbols: int) -> np.ndarray:
+    """Host-side symbol-indexed re-layout: ``out[i]`` is the word emitted at
+    flat symbol index ``i`` (0 where symbol ``i`` emitted nothing).  The
+    device derivations live in ``core.encode.ops`` (from the emit masks) and
+    ``core.engine.plan`` (from an explicit log); this is the oracle."""
+    kw = np.asarray(k_of_word, np.int64)
+    words = np.ascontiguousarray(stream)
+    if words.size != kw.size:
+        raise ValueError(
+            f"emission log covers {kw.size} words, stream has {words.size}")
+    out = np.zeros(n_symbols, np.uint32)
+    if kw.size:
+        if int(kw.min()) < 0 or int(kw.max()) >= n_symbols:
+            raise ValueError("emission log indexes outside [0, n_symbols)")
+        out[kw] = words.astype(np.uint32)
+    return out
+
+
+def _walk_one_split_symbol(by_groups: jax.Array, sym_lut: jax.Array,
+                           f_lut: jax.Array, F_lut: jax.Array, k: jax.Array,
+                           y: jax.Array, x0: jax.Array, sym_base: jax.Array,
+                           g_hi: jax.Array, start: jax.Array, stop: jax.Array,
+                           keep_lo: jax.Array, keep_hi: jax.Array, *,
+                           n_bits: int, ways: int, n_steps: int,
+                           ctx_of_index: jax.Array | None = None):
+    """One split's pointer-free walk; returns (syms i32[T, W], keep bool).
+
+    Identical decode math to :func:`_walk_one_split`, but the stream words
+    for the group at symbol indices ``g*W + sym_base + [0, W)`` are row
+    ``g + sym_base/W`` of ``by_groups`` (the permutation viewed (G, W)) —
+    and since the scan visits rows ``g_hi, g_hi-1, ...`` the whole word
+    sequence is ONE bulk row gather hoisted out of the scan and consumed as
+    scan xs.  The scan body keeps a single gather (the LUT) and the carry
+    is just the lane states: no stream pointer, no read-offset cumsum.
+    """
+    W = ways
+    lanes = jnp.arange(W, dtype=jnp.int32)
+    slot_mask = np.uint32((1 << n_bits) - 1)
+    L = np.uint32(1 << 16)
+    b_bits = np.uint32(16)
+    k32 = k.astype(jnp.int32)
+    tarr = jnp.arange(n_steps, dtype=jnp.int32)
+    # sym_base is in symbol units and W-aligned by construction (checked at
+    # plan/concat time), so the group-row shift is exact.
+    rows = jnp.clip(g_hi + sym_base // W - tarr, 0, by_groups.shape[0] - 1)
+    words_t = jnp.take(by_groups, rows, axis=0)   # (T, W), out of the scan
+
+    def step(x, inp):
+        t, word = inp
+        g = g_hi - t
+        i = g * W + lanes                      # walk symbol indices, this group
+        active = (i <= start) & (i >= stop) & (g >= 0)
+        recon = active & (i == k32)
+        dec = active & (i < k32)
+        slot = (x & slot_mask).astype(jnp.int32)
+        s, fs, Fs = _slot_decode(sym_lut, f_lut, F_lut, slot, i, ctx_of_index)
+        x_dec = fs * (x >> np.uint32(n_bits)) + (slot.astype(jnp.uint32) - Fs)
+        under = x_dec < L
+        x_recon = (y << b_bits) | word
+        x_dec2 = jnp.where(under, (x_dec << b_bits) | word, x_dec)
+        x_new = jnp.where(recon, x_recon, jnp.where(dec, x_dec2, x))
+        keep = dec & (i >= keep_lo) & (i < keep_hi)
+        return x_new, (s, keep)
+
+    _xf, (syms, keeps) = jax.lax.scan(step, x0, (tarr, words_t))
+    return syms, keeps
+
+
+def _walk_batch_symbol_impl(by_symbol, sym_lut, f_lut, F_lut, k, y, x0,
+                            sym_base, g_hi, start, stop, keep_lo, keep_hi,
+                            out_base, *, n_bits, ways, n_steps, n_symbols,
+                            ctx_of_index=None):
+    if by_symbol.shape[0] % ways:
+        raise ValueError(
+            f"words_by_symbol length {by_symbol.shape[0]} is not a multiple "
+            f"of ways={ways}")
+    by_groups = by_symbol.reshape(-1, ways)
+    walk = functools.partial(_walk_one_split_symbol, by_groups, sym_lut,
+                             f_lut, F_lut, n_bits=n_bits, ways=ways,
+                             n_steps=n_steps, ctx_of_index=ctx_of_index)
+    syms, keeps = jax.vmap(walk)(k, y, x0, sym_base, g_hi, start, stop,
+                                 keep_lo, keep_hi)
+    return _scatter_kept(syms, keeps, g_hi, out_base, ways=ways,
+                         n_steps=n_steps, n_symbols=n_symbols)
+
+
+_walk_batch_symbol_jit = jax.jit(
+    _walk_batch_symbol_impl,
+    static_argnames=("n_bits", "ways", "n_steps", "n_symbols"))
+
+
+def walk_decode_batch_symbol(batch: WalkBatch, by_symbol: np.ndarray,
+                             model: StaticModel, n_symbols: int,
+                             ctx_model=None,
+                             packed_lut: bool = False) -> np.ndarray:
+    """Pointer-free decode of all splits in parallel (symbol-indexed layout).
+
+    ``by_symbol`` is the :func:`words_by_symbol_host` permutation (or any
+    padding of it).  Same contract as :func:`walk_decode_batch`; the two are
+    bit-exact by the emission-log bijection (tests/test_conformance.py).
+    """
+    if n_symbols >= 2 ** 31:
+        raise ValueError(
+            f"n_symbols={n_symbols} exceeds int32 device-scatter indices")
+    bases = batch.sym_bases()
+    if bases.size and np.any(bases % batch.ways):
+        raise ValueError("sym_base entries must be multiples of ways")
+    sym_base = jnp.asarray(bases)
+    wbs_host = np.ascontiguousarray(by_symbol).astype(np.uint32)
+    pad = (-len(wbs_host)) % batch.ways
+    if pad:
+        wbs_host = np.concatenate([wbs_host, np.zeros(pad, np.uint32)])
+    wbs = jnp.asarray(wbs_host)
+    if packed_lut and ctx_model is None:
+        from .rans import pack_decode_lut
+        packed = pack_decode_lut(model.f, model.F)
+        args = (jnp.asarray(packed), None, None)
+        n_bits = model.params.n_bits
+        ctx = None
+    elif ctx_model is not None:
+        F2 = ctx_model.F[:, :-1].astype(np.int32)
+        slot_f = np.take_along_axis(ctx_model.f.astype(np.int32),
+                                    ctx_model.slot_luts(), axis=1)
+        slot_F = np.take_along_axis(F2, ctx_model.slot_luts(), axis=1)
+        args = (jnp.asarray(ctx_model.slot_luts()), jnp.asarray(slot_f),
+                jnp.asarray(slot_F))
+        n_bits = ctx_model.params.n_bits
+        ctx = jnp.asarray(ctx_model.ctx.astype(np.int32))
+    else:
+        lut = model.slot_lut()
+        slot_f = model.f.astype(np.int32)[lut]
+        slot_F = model.F[:-1].astype(np.int32)[lut]
+        args = (jnp.asarray(lut), jnp.asarray(slot_f), jnp.asarray(slot_F))
+        n_bits = model.params.n_bits
+        ctx = None
+    out = _walk_batch_symbol_jit(
+        wbs, *args,
+        jnp.asarray(batch.k), jnp.asarray(batch.y), jnp.asarray(batch.x0),
+        sym_base, jnp.asarray(batch.g_hi), jnp.asarray(batch.start),
+        jnp.asarray(batch.stop), jnp.asarray(batch.keep_lo),
+        jnp.asarray(batch.keep_hi), jnp.asarray(batch.out_base),
+        n_bits=n_bits, ways=batch.ways, n_steps=batch.n_steps,
+        n_symbols=n_symbols, ctx_of_index=ctx)
+    res = np.asarray(out, dtype=np.int64)
+    assert (res >= 0).all(), "symbol-layout walk left uncovered symbols"
+    return res
 
 
 def walk_decode_batch(batch: WalkBatch, stream: np.ndarray, model: StaticModel,

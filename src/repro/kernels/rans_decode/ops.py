@@ -59,6 +59,7 @@ def pack_batch(batch: WalkBatch):
     keep_lo = pad_splits(batch.keep_lo, np.int32(0))
     keep_hi = pad_splits(batch.keep_hi, np.int32(0))
     out_base = pad_splits(batch.out_base.astype(np.int32), np.int32(0))
+    sym_base = pad_splits(batch.sym_bases(), np.int32(0))
 
     def lanes(a):   # (S_pad, W) -> (rows, 128)
         return np.ascontiguousarray(a.reshape(rows, pack * W))
@@ -72,7 +73,8 @@ def pack_batch(batch: WalkBatch):
         x0=lanes(x0.view(np.int32)), q0=scalars(q0), g_hi=scalars(g_hi),
         start=scalars(start), stop=scalars(stop), keep_lo=scalars(keep_lo),
         keep_hi=scalars(keep_hi))
-    per_split = dict(q0=q0, g_hi=g_hi, out_base=out_base, span=start - stop + 1)
+    per_split = dict(q0=q0, g_hi=g_hi, out_base=out_base,
+                     span=start - stop + 1, start=start, sym_base=sym_base)
     return packed, per_split, rows, pack, S_pad
 
 
@@ -90,7 +92,7 @@ def pad_to_rows(packed: dict, per_split: dict, rows: int, pack: int,
                 fill = 2 ** 30
             packed[name] = np.concatenate(
                 [arr, np.full((pad_rows, LANES), fill, arr.dtype)], axis=0)
-        for name in ("q0", "g_hi", "out_base", "span"):
+        for name in ("q0", "g_hi", "out_base", "span", "start", "sym_base"):
             a = per_split[name]
             per_split[name] = np.concatenate(
                 [a, np.zeros(pad_rows * pack, a.dtype)])
@@ -225,6 +227,28 @@ def decode_tiles_fused(slabs, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi,
     the (rows, T, 128) tile lives only between the two fused stages."""
     out, _qf = walk_decode_pallas(
         slabs, sym_lut, f_lut, F_lut, k, y, x0, q0, g_hi, start, stop,
+        keep_lo, keep_hi, n_bits=n_bits, ways=ways, n_steps=n_steps,
+        rows_per_block=rows_per_block, interpret=interpret)
+    return scatter_outputs(out, g_hi_split, out_base_split, ways=ways,
+                           pack=pack, n_symbols=n_symbols)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_bits", "ways", "n_steps", "rows_per_block", "interpret", "pack",
+    "n_symbols"))
+def decode_tiles_fused_symbol(slabs, sym_lut, f_lut, F_lut, k, y, x0, sym_rel,
+                              g_hi, start, stop, keep_lo, keep_hi, g_hi_split,
+                              out_base_split, *, n_bits: int, ways: int,
+                              n_steps: int, rows_per_block: int,
+                              interpret: bool, pack: int,
+                              n_symbols: int) -> jax.Array:
+    """Symbol-layout twin of :func:`decode_tiles_fused`: the pointer-free
+    Pallas walk (``slabs`` hold per-block ``words_by_symbol`` windows,
+    ``sym_rel`` the slab-relative permutation bases) + the same on-device
+    scatter, fused into ONE cacheable executable."""
+    from .rans_decode import walk_decode_symbol_pallas
+    out = walk_decode_symbol_pallas(
+        slabs, sym_lut, f_lut, F_lut, k, y, x0, sym_rel, g_hi, start, stop,
         keep_lo, keep_hi, n_bits=n_bits, ways=ways, n_steps=n_steps,
         rows_per_block=rows_per_block, interpret=interpret)
     return scatter_outputs(out, g_hi_split, out_base_split, ways=ways,

@@ -73,6 +73,23 @@ def _segment_read_offsets(reads: jax.Array, ways: int):
     return suffix_excl, seg_total
 
 
+def _kernel_slot_decode(sym_ref, f_ref, F_ref, slot, packed: bool):
+    """slot -> (symbol, f, F) from VMEM-resident tables — the §4.4 packed
+    single-int32 unpack (sym[0:8] | f[8:20] | F[20:32]) or three split
+    gathers.  Shared by the pointer and symbol-layout kernels; the jnp
+    walks' array-based twin is ``vectorized._slot_decode``."""
+    if packed:
+        pw = jnp.take(sym_ref[...], slot).astype(jnp.uint32)
+        s = (pw & jnp.uint32(0xFF)).astype(jnp.int32)
+        fs = (pw >> jnp.uint32(8)) & jnp.uint32(0xFFF)
+        Fs = (pw >> jnp.uint32(20)) & jnp.uint32(0xFFF)
+    else:
+        s = jnp.take(sym_ref[...], slot)
+        fs = jnp.take(f_ref[...], slot).astype(jnp.uint32)
+        Fs = jnp.take(F_ref[...], slot).astype(jnp.uint32)
+    return s, fs, Fs
+
+
 def _walk_kernel(stream_ref, *refs, n_bits: int, ways: int, n_steps: int,
                  packed: bool):
     """One grid step: walk ``n_steps`` symbol groups for a (ROWS, 128) tile.
@@ -111,15 +128,7 @@ def _walk_kernel(stream_ref, *refs, n_bits: int, ways: int, n_steps: int,
         recon = active & (i == k)
         dec = active & (i < k)
         slot = (x & slot_mask).astype(jnp.int32)
-        if packed:
-            pw = jnp.take(sym_ref[...], slot).astype(jnp.uint32)
-            s = (pw & jnp.uint32(0xFF)).astype(jnp.int32)
-            fs = (pw >> jnp.uint32(8)) & jnp.uint32(0xFFF)
-            Fs = (pw >> jnp.uint32(20)) & jnp.uint32(0xFFF)
-        else:
-            s = jnp.take(sym_ref[...], slot)
-            fs = jnp.take(f_ref[...], slot).astype(jnp.uint32)
-            Fs = jnp.take(F_ref[...], slot).astype(jnp.uint32)
+        s, fs, Fs = _kernel_slot_decode(sym_ref, f_ref, F_ref, slot, packed)
         x_dec = fs * (x >> jnp.uint32(n_bits)) + (slot.astype(jnp.uint32) - Fs)
         under = x_dec < L_bound
         reads = recon | (dec & under)
@@ -139,6 +148,111 @@ def _walk_kernel(stream_ref, *refs, n_bits: int, ways: int, n_steps: int,
     q0 = q0_ref[...]
     xf, qf = jax.lax.fori_loop(0, n_steps, step, (x0, q0))
     qf_ref[...] = qf
+
+
+def _walk_kernel_symbol(slab_ref, *refs, n_bits: int, ways: int,
+                        n_steps: int, packed: bool):
+    """Pointer-free grid step (symbol-indexed layout, DESIGN.md §9).
+
+    ``slab_ref`` holds the block's window of the ``words_by_symbol``
+    permutation: lane l of segment j fetches ``slab[i + sym_rel]`` where
+    ``i`` is its own walk symbol index — so the warp-ballot/cumsum read
+    -offset machinery of :func:`_walk_kernel` disappears entirely and the
+    carry is just the lane states.  On the VPU this removes the only
+    cross-lane dependency in the step.
+    """
+    if packed:
+        (sym_ref, k_ref, y_ref, x0_ref, symb_ref, ghi_ref, start_ref,
+         stop_ref, klo_ref, khi_ref, out_ref) = refs
+        f_ref = F_ref = None
+    else:
+        (sym_ref, f_ref, F_ref, k_ref, y_ref, x0_ref, symb_ref, ghi_ref,
+         start_ref, stop_ref, klo_ref, khi_ref, out_ref) = refs
+    L_bound = jnp.uint32(1 << 16)
+    b_bits = jnp.uint32(16)
+    slot_mask = jnp.uint32((1 << n_bits) - 1)
+    rows, L = k_ref.shape
+    lane_in_seg = (jax.lax.iota(jnp.int32, L) % ways)[None, :]
+
+    k = k_ref[...]
+    y = y_ref[...].astype(jnp.uint32)
+    start = start_ref[...]
+    stop = stop_ref[...]
+    keep_lo = klo_ref[...]
+    keep_hi = khi_ref[...]
+    g_hi = ghi_ref[...]
+    sym_rel = symb_ref[...]
+    wbs = slab_ref[0]  # block spec delivers (1, slab_words)
+
+    def step(t, x):
+        g = g_hi - t
+        i = g * ways + lane_in_seg
+        active = (i <= start) & (i >= stop)
+        recon = active & (i == k)
+        dec = active & (i < k)
+        slot = (x & slot_mask).astype(jnp.int32)
+        s, fs, Fs = _kernel_slot_decode(sym_ref, f_ref, F_ref, slot, packed)
+        x_dec = fs * (x >> jnp.uint32(n_bits)) + (slot.astype(jnp.uint32) - Fs)
+        under = x_dec < L_bound
+        idx = jnp.clip(i + sym_rel, 0, wbs.shape[0] - 1)
+        word = jnp.take(wbs, idx).astype(jnp.uint32)
+        x_recon = (y << b_bits) | word
+        x_dec2 = jnp.where(under, (x_dec << b_bits) | word, x_dec)
+        x_new = jnp.where(recon, x_recon, jnp.where(dec, x_dec2, x))
+        keep = dec & (i >= keep_lo) & (i < keep_hi)
+        pl.store(out_ref, (slice(None), pl.dslice(t, 1), slice(None)),
+                 jnp.where(keep, s, -1)[:, None, :])
+        return x_new
+
+    jax.lax.fori_loop(0, n_steps, step, x0_ref[...].astype(jnp.uint32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "ways", "n_steps", "rows_per_block", "interpret"))
+def walk_decode_symbol_pallas(slabs: jax.Array, sym_lut: jax.Array,
+                              f_lut: jax.Array | None,
+                              F_lut: jax.Array | None, k: jax.Array,
+                              y: jax.Array, x0: jax.Array, sym_rel: jax.Array,
+                              g_hi: jax.Array, start: jax.Array,
+                              stop: jax.Array, keep_lo: jax.Array,
+                              keep_hi: jax.Array, *, n_bits: int, ways: int,
+                              n_steps: int, rows_per_block: int = 8,
+                              interpret: bool = True):
+    """pallas_call wrapper for the symbol-indexed walk.  ``slabs`` is the
+    per-block window of ``words_by_symbol`` with ``sym_rel`` already
+    slab-relative; everything else matches :func:`walk_decode_pallas`
+    minus the stream pointer (no ``q0``, no ``qf`` output)."""
+    packed = f_lut is None
+    assert (F_lut is None) == packed, "pass both f_lut and F_lut or neither"
+    n_rows, L = k.shape
+    assert L == LANES and n_rows % rows_per_block == 0
+    n_blocks = n_rows // rows_per_block
+    assert slabs.shape[0] == n_blocks
+    slab_words = slabs.shape[1]
+    R = rows_per_block
+
+    grid = (n_blocks,)
+    row_spec = pl.BlockSpec((R, L), lambda b: (b, 0))
+    full = lambda arr: pl.BlockSpec(arr.shape, lambda b: (0,) * arr.ndim)
+    kernel = functools.partial(_walk_kernel_symbol, n_bits=n_bits, ways=ways,
+                               n_steps=n_steps, packed=packed)
+    lut_args = (sym_lut,) if packed else (sym_lut, f_lut, F_lut)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, slab_words), lambda b: (b, 0)),  # permutation
+            *[full(a) for a in lut_args],
+            row_spec, row_spec, row_spec, row_spec, row_spec, row_spec,
+            row_spec, row_spec, row_spec,
+        ],
+        out_specs=pl.BlockSpec((R, n_steps, L), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, n_steps, L), jnp.int32),
+        interpret=interpret,
+    )(slabs, *lut_args, k, y, x0, sym_rel, g_hi,
+      start, stop, keep_lo, keep_hi)
+    return out
 
 
 @functools.partial(

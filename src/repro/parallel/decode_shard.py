@@ -54,11 +54,11 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.engine.executors import JnpExecutor
+from repro.core.engine.executors import JnpExecutor, _check_sym_alignment
 from repro.core.engine.plan import (DecodePlan, SPLIT_FIELDS,
-                                    pad_split_arrays, pow2_bucket,
-                                    work_bucket)
-from repro.core.vectorized import _walk_batch_impl
+                                    SYMBOL_SPLIT_FIELDS, pad_split_arrays,
+                                    pow2_bucket, work_bucket)
+from repro.core.vectorized import _walk_batch_impl, _walk_batch_symbol_impl
 
 
 class ShardedExecutor(JnpExecutor):
@@ -72,8 +72,9 @@ class ShardedExecutor(JnpExecutor):
 
     impl = "sharded"
 
-    def __init__(self, model, packed_lut: bool, luts: tuple, *, mesh=None):
-        super().__init__(model, packed_lut, luts)
+    def __init__(self, model, packed_lut: bool, luts: tuple, *, mesh=None,
+                 layout: str = "auto"):
+        super().__init__(model, packed_lut, luts, layout)
         if mesh is None:
             from repro.launch.mesh import make_decode_mesh
             mesh = make_decode_mesh()
@@ -91,21 +92,23 @@ class ShardedExecutor(JnpExecutor):
         # handle on every plan would move stream bytes per request under
         # broker traffic (the pipeline plans on every fused-group miss).
         # Weakref-identity keyed, like the jnp executor's upgrade cache;
-        # lock-guarded like it too (plan() may run from any thread).
-        self._repl_cache: dict[int, tuple[weakref.ref, jax.Array]] = {}
+        # lock-guarded like it too (plan() may run from any thread).  Keys
+        # carry the field name — the symbol layout re-pins ``by_symbol``
+        # through the same cache.
+        self._repl_cache: dict[tuple, tuple[weakref.ref, jax.Array]] = {}
         self._repl_lock = threading.Lock()
 
-    def _replicated(self, ds) -> jax.Array:
+    def _replicated(self, ds, field: str = "words") -> jax.Array:
         with self._repl_lock:
-            hit = self._repl_cache.get(id(ds))
+            hit = self._repl_cache.get((id(ds), field))
             if hit is not None and hit[0]() is ds:
                 return hit[1]
-            repl = jax.device_put(ds.words, self._repl)
+            repl = jax.device_put(getattr(ds, field), self._repl)
             if len(self._repl_cache) > 512:   # prune dead handles
                 for key in [k for k, (ref, _) in self._repl_cache.items()
                             if ref() is None]:
                     del self._repl_cache[key]
-            self._repl_cache[id(ds)] = (weakref.ref(ds), repl)
+            self._repl_cache[(id(ds), field)] = (weakref.ref(ds), repl)
             return repl
 
     # Streams upload replicated over the mesh; plan() thins them into
@@ -121,12 +124,8 @@ class ShardedExecutor(JnpExecutor):
         return self.n_shards * work_bucket(-(-S // self.n_shards))
 
     def plan(self, batch, ds, n_symbols: int) -> DecodePlan:
-        ds = self.resident(ds)
-        # Fused streams built by the microbatcher (device-side concatenate)
-        # may come back without an explicit sharding; re-pin replicated so
-        # the slab gather below reads a mesh-consistent source (memoized
-        # per live handle — warm broker traffic moves no stream bytes).
-        stream = self._replicated(ds)
+        layout = self.select_layout(ds)
+        self._count_layout(layout)
         p = self.model.params
         W = batch.ways
         S = batch.k.shape[0]
@@ -134,17 +133,61 @@ class ShardedExecutor(JnpExecutor):
         steps_b = work_bucket(batch.n_steps)
         out_b = pow2_bucket(n_symbols)
         arrs = pad_split_arrays(batch, s_b)
+        rows_per = s_b // self.n_shards
+        statics = dict(n_bits=p.n_bits, ways=W, n_steps=steps_b,
+                       n_symbols=out_b)
+
+        start = np.full(s_b, -1, np.int64)
+        stop = np.zeros(s_b, np.int64)
+        start[:S] = batch.start
+        stop[:S] = batch.stop
+        act = (start >= 0).reshape(self.n_shards, rows_per)
+
+        if layout == "symbol":
+            _check_sym_alignment(batch, ds, W)
+            # Per-shard slab thinning, permutation edition: row m's walk
+            # gathers symbol indices [stop + sym_base, start + sym_base],
+            # so the shard slab is that union sliced from words_by_symbol
+            # (rounded down to a whole W-group so group rows stay aligned).
+            # Replaces the pointer path's q0-read-window union.
+            by_sym = self._replicated(ds, "by_symbol")
+            sym_base = np.zeros(s_b, np.int64)
+            sym_base[:S] = batch.sym_bases()
+            row_lo = (stop + sym_base).reshape(self.n_shards, rows_per)
+            row_hi = (start + sym_base).reshape(self.n_shards, rows_per)
+            lo_s = np.where(act, row_lo, np.int64(1) << 60).min(axis=1)
+            hi_s = np.where(act, row_hi, np.int64(-1)).max(axis=1)
+            lo_s = np.clip(np.minimum(lo_s, hi_s + 1), 0, None)
+            lo_s = (lo_s // W) * W                       # whole-group origin
+            slab_len = int(np.maximum(hi_s - lo_s + 1, 0).max()) if S else 1
+            slab_b = pow2_bucket(max(slab_len, W), 1024)
+            gidx = jnp.asarray(lo_s.astype(np.int32))[:, None] \
+                + jnp.arange(slab_b, dtype=jnp.int32)
+            slabs = jax.device_put(
+                by_sym[jnp.clip(gidx, 0, ds.sym_bucket - 1)],
+                self._slab_rows)
+            arrs["sym_base"] = jnp.asarray(
+                (sym_base - np.repeat(lo_s, rows_per)).astype(np.int32))
+            key = (self.impl, layout, self.n_shards, self.axes,
+                   self.packed_lut, p.n_bits, W, s_b, steps_b, slab_b, out_b)
+            args = (slabs, *self.luts,
+                    *(jax.device_put(arrs[f], self._rows)
+                      for f in SYMBOL_SPLIT_FIELDS))
+            return DecodePlan(key=key, args=args, statics=statics,
+                              n_symbols=n_symbols, out_bucket=out_b,
+                              layout=layout)
+
+        ds = self.resident(ds)
+        # Fused streams built by the microbatcher (device-side concatenate)
+        # may come back without an explicit sharding; re-pin replicated so
+        # the slab gather below reads a mesh-consistent source (memoized
+        # per live handle — warm broker traffic moves no stream bytes).
+        stream = self._replicated(ds)
 
         # --- per-shard read windows (host arithmetic on the padded layout;
         # inert padding rows carry start = -1 and are excluded) ---
         q0 = np.zeros(s_b, np.int64)
-        start = np.full(s_b, -1, np.int64)
-        stop = np.zeros(s_b, np.int64)
         q0[:S] = batch.q0
-        start[:S] = batch.start
-        stop[:S] = batch.stop
-        rows_per = s_b // self.n_shards
-        act = (start >= 0).reshape(self.n_shards, rows_per)
         row_lo = (q0 - (start - stop)).reshape(self.n_shards, rows_per)
         row_hi = q0.reshape(self.n_shards, rows_per)
         lo_s = np.where(act, row_lo, np.int64(1) << 60).min(axis=1)
@@ -159,25 +202,34 @@ class ShardedExecutor(JnpExecutor):
         arrs["q0"] = jnp.asarray(
             (q0 - np.repeat(lo_s, rows_per)).astype(np.int32))
 
-        key = (self.impl, self.n_shards, self.axes, self.packed_lut,
+        key = (self.impl, layout, self.n_shards, self.axes, self.packed_lut,
                p.n_bits, W, s_b, steps_b, slab_b, out_b)
         args = (slabs, *self.luts,
                 *(jax.device_put(arrs[f], self._rows) for f in SPLIT_FIELDS))
-        statics = dict(n_bits=p.n_bits, ways=W, n_steps=steps_b,
-                       n_symbols=out_b)
         return DecodePlan(key=key, args=args, statics=statics,
-                          n_symbols=n_symbols, out_bucket=out_b)
+                          n_symbols=n_symbols, out_bucket=out_b,
+                          layout=layout)
 
     def lower(self, plan: DecodePlan):
         st = plan.statics
         axes = self.axes
 
-        def local(slab, sym_lut, f_lut, F_lut, *splits):
-            out, _qf = _walk_batch_impl(
-                slab[0], sym_lut, f_lut, F_lut, *splits,
-                n_bits=st["n_bits"], ways=st["ways"], n_steps=st["n_steps"],
-                n_symbols=st["n_symbols"], ctx_of_index=None)
-            return jax.lax.pmax(out, axes)
+        if plan.layout == "symbol":
+            def local(slab, sym_lut, f_lut, F_lut, *splits):
+                out = _walk_batch_symbol_impl(
+                    slab[0], sym_lut, f_lut, F_lut, *splits,
+                    n_bits=st["n_bits"], ways=st["ways"],
+                    n_steps=st["n_steps"], n_symbols=st["n_symbols"],
+                    ctx_of_index=None)
+                return jax.lax.pmax(out, axes)
+        else:
+            def local(slab, sym_lut, f_lut, F_lut, *splits):
+                out, _qf = _walk_batch_impl(
+                    slab[0], sym_lut, f_lut, F_lut, *splits,
+                    n_bits=st["n_bits"], ways=st["ways"],
+                    n_steps=st["n_steps"], n_symbols=st["n_symbols"],
+                    ctx_of_index=None)
+                return jax.lax.pmax(out, axes)
 
         sharded = shard_map(
             local, mesh=self.mesh,

@@ -10,7 +10,8 @@ microbatching, admission control) and turns the service into a thin façade
   * :mod:`.capability` — per-client parallelism + downscaled plan/container
 """
 
-from .broker import BrokerSaturated, PipelineBroker, PipelineTicket
+from .broker import (BrokerSaturated, PipelineBroker, PipelineTicket,
+                     TicketCancelled)
 from .capability import CapabilityRegistry, ClientCapability
 from .controller import AdaptiveController, ControllerConfig, FlushDecision
 
@@ -23,4 +24,5 @@ __all__ = [
     "FlushDecision",
     "PipelineBroker",
     "PipelineTicket",
+    "TicketCancelled",
 ]

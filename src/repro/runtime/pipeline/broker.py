@@ -57,38 +57,71 @@ class BrokerSaturated(RuntimeError):
     back off (or surface 429-style pushback); nothing was enqueued."""
 
 
+class TicketCancelled(RuntimeError):
+    """Raised by ``result()`` on a ticket whose request was cancelled."""
+
+
 class PipelineTicket(DecodeTicket):
     """Cross-thread future for a broker request (decode or ingest).
 
     ``result(timeout)`` blocks on the worker's completion event —
     timestamps record submit/dispatch/completion for the latency windows.
+    ``cancel()`` withdraws the request: cancelled tickets are dropped when
+    the worker builds its dispatch group (they never reach the engine), and
+    a cancel that races an in-flight dispatch discards the delivered result
+    — ``result()`` raises :class:`TicketCancelled` either way.
     """
 
-    __slots__ = ("_event", "kind", "submitted_at", "dispatched_at",
-                 "completed_at")
+    __slots__ = ("_event", "_mutex", "_cancelled", "kind", "submitted_at",
+                 "dispatched_at", "completed_at")
 
     def __init__(self, svc, kind: str = "decode"):
         super().__init__(svc)
         self._event = threading.Event()
+        self._mutex = threading.Lock()   # orders cancel() vs _fulfill()
+        self._cancelled = False
         self.kind = kind
         self.submitted_at = time.perf_counter()
         self.dispatched_at = None
         self.completed_at = None
 
     def _fulfill(self, out=None, err=None) -> None:
-        self.out = out
-        self.err = err
-        self.completed_at = time.perf_counter()
-        self._event.set()
+        with self._mutex:
+            if self._cancelled:
+                return   # cancelled in flight: the late result is dropped
+            self.out = out
+            self.err = err
+            self.completed_at = time.perf_counter()
+            self._event.set()
 
     def done(self) -> bool:
         return self._event.is_set()
 
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def cancel(self) -> bool:
+        """Withdraw the request.  True iff the cancellation wins — the
+        caller will never observe a result (queued tickets are dropped at
+        dispatch-group build time; in-flight ones have their result
+        discarded on delivery).  False if the request already completed."""
+        with self._mutex:
+            if self._event.is_set():
+                return False
+            self._cancelled = True
+            self.err = TicketCancelled(f"{self.kind} request cancelled")
+            self.completed_at = time.perf_counter()
+            self._event.set()
+            return True
+
     def result(self, timeout: float | None = 120.0):
         """The decode output (device symbol array) or ingest result
         (:class:`~repro.core.recoil.RecoilPlan`); raises the dispatch error
-        if the request failed, TimeoutError if the broker never completed
-        it within ``timeout`` seconds."""
+        if the request failed, :class:`TicketCancelled` if it was
+        cancelled, TimeoutError if the broker never completed it within
+        ``timeout`` seconds (the request stays queued/in flight — a timed
+        -out caller typically follows up with ``cancel()``)."""
         if not self._event.wait(timeout):
             raise TimeoutError(
                 f"{self.kind} request not completed within {timeout}s")
@@ -139,6 +172,7 @@ class PipelineBroker:
         self.submitted = 0
         self.completed = 0
         self.rejected = 0
+        self.cancelled = 0          # tickets dropped at dispatch-group build
         self.dispatch_groups = 0
         self.dispatch_errors = 0
         self.ingest_events = 0
@@ -303,15 +337,25 @@ class PipelineBroker:
                 self._cv.notify_all()
 
     def _dispatch(self, lane: int, popped: list) -> None:
-        tickets = [t for t, _ in popped]
-        requests = [(name, lane) for _, name in popped]
+        # Cancelled tickets are dropped HERE — at dispatch-group build time
+        # — so a withdrawn request never reaches the engine and never pads
+        # a fused executable call.  (A cancel landing after this point races
+        # the in-flight dispatch; the ticket's mutex discards the result.)
+        live = [p for p in popped if not p[0].cancelled]
+        if len(live) < len(popped):
+            with self._cv:   # two workers bump this counter; see snapshot()
+                self.cancelled += len(popped) - len(live)
+        if not live:
+            return
+        tickets = [t for t, _ in live]
+        requests = [(name, lane) for _, name in live]
         if self.quantize_groups:
             target = self.controller.quantize(len(requests))
             for i in range(target - len(requests)):
-                requests.append(requests[i % len(popped)])
+                requests.append(requests[i % len(live)])
                 tickets.append(DecodeTicket(self.svc))   # ticketless filler
         t0 = self.clock.begin("decode")
-        for t, _ in popped:
+        for t, _ in live:
             t.dispatched_at = t0
             self.wait_window.record(t0 - t.submitted_at)
         try:
@@ -322,10 +366,10 @@ class PipelineBroker:
             self.dispatch_errors += 1   # tickets already carry the error
         t1 = self.clock.end("decode")
         self.controller.observe_service(len(requests), t1 - t0)
-        for _ in popped:
+        for _ in live:
             self.service_window.record(t1 - t0)
         self.dispatch_groups += 1
-        self.completed += len(popped)
+        self.completed += len(live)
 
     def _pop_ingest_batch(self):
         """Under ``_cv``: a queue prefix of events with DISTINCT names (a
@@ -351,27 +395,33 @@ class PipelineBroker:
                     continue
                 batch = self._pop_ingest_batch()
                 self._ingest_inflight += len(batch)
+            # Same drop point as decode: cancelled ingests never encode.
+            live = [ev for ev in batch if not ev[0].cancelled]
+            if len(live) < len(batch):
+                with self._cv:   # shared with the decode worker's bumps
+                    self.cancelled += len(batch) - len(live)
             t0 = self.clock.begin("ingest")
             try:
-                if len(batch) == 1:
-                    ticket, name, symbols, n_splits = batch[0]
+                if len(live) == 1:
+                    ticket, name, symbols, n_splits = live[0]
                     plan = self.svc.ingest(name, symbols, n_splits)
                     ticket._fulfill(out=plan)
-                else:
+                elif live:
                     contents = {name: symbols
-                                for _, name, symbols, _ in batch}
+                                for _, name, symbols, _ in live}
                     plans = self.svc.ingest_batch(
-                        contents, [n for _, _, _, n in batch])
-                    for ticket, name, _, _ in batch:
+                        contents, [n for _, _, _, n in live])
+                    for ticket, name, _, _ in live:
                         ticket._fulfill(out=plans[name])
             except Exception as e:
                 self.ingest_errors += 1
-                for ticket, *_ in batch:
+                for ticket, *_ in live:
                     ticket._fulfill(err=e)
             t1 = self.clock.end("ingest")
-            for _ in batch:
-                self.ingest_window.record((t1 - t0) / len(batch))
-            self.ingest_dispatches += 1
+            for _ in live:
+                self.ingest_window.record((t1 - t0) / len(live))
+            if live:
+                self.ingest_dispatches += 1
             with self._cv:
                 self._ingest_inflight -= len(batch)
                 self._cv.notify_all()
@@ -400,6 +450,7 @@ class PipelineBroker:
             "submitted": self.submitted,
             "completed": self.completed,
             "rejected": self.rejected,
+            "cancelled": self.cancelled,
             "dispatch_groups": self.dispatch_groups,
             "dispatch_errors": self.dispatch_errors,
             "ingest_events": self.ingest_events,

@@ -154,6 +154,16 @@ class CapabilityRegistry:
             self._container_memo[key] = (gen, buf)
         return buf
 
+    def layout_for(self, name: str) -> str:
+        """The decode layout the content serves under — negotiated like a
+        capability, but server-side: content registered/ingested with an
+        emission log serves the pointer-free symbol-indexed walk, anything
+        else the pointer fallback (DESIGN.md §9).  Downscaling is layout
+        -independent: a thinned plan deletes split entries only, and the
+        permutation is indexed by absolute symbol position, so the same
+        ``words_by_symbol`` serves every declared ``n_threads``."""
+        return self._svc.layout_for(name)
+
     def submit_for(self, name: str, client_id: str):
         """Decode ticket at the client's declared capability (broker lanes
         when the pipeline is running, sync microbatching otherwise)."""

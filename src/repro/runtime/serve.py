@@ -58,7 +58,8 @@ import numpy as np
 
 from repro.core.encode import EncoderSession
 from repro.core.engine import (DecodePlan, DecoderSession, DeviceStream,
-                               concat_walk_batches, pow2_bucket)
+                               concat_walk_batches, pow2_bucket,
+                               with_symbol_layout)
 from repro.core.rans import StaticModel
 from repro.core.recoil import RecoilPlan, build_split_states, combine_plan
 from repro.core.vectorized import WalkBatch
@@ -138,6 +139,8 @@ class ServiceStats:
     encode_compiles: int = 0   # ingest-engine executable builds
     encode_fallbacks: int = 0  # full-rounds heuristic re-runs
     host_materializations: int = 0  # lazy device->host stream copies (pallas)
+    symbol_plans: int = 0      # requests planned on the symbol-indexed layout
+    pointer_plans: int = 0     # requests planned on the pointer-walk fallback
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -225,14 +228,21 @@ class DecodeService:
         self._broker = None   # attached by start_pipeline()
 
     def register(self, name: str, plan: RecoilPlan, stream, final_states,
-                 *, model=None) -> None:
+                 *, model=None, emission_log=None) -> None:
         """Register encoded content.  ``stream`` is a raw word array or an
         already-resident :class:`DeviceStream` (e.g. from :meth:`ingest` —
         never re-uploaded).  The content is validated against the service's
         model before it can serve: a mismatched payload raises here instead
         of silently mis-decoding for every client.  Pass ``model`` (the
         model the content was encoded with) to also check the distribution
-        tables themselves."""
+        tables themselves.
+
+        ``emission_log`` is the encoder's ``k_of_word`` array (one flat
+        symbol index per stream word).  When present, the symbol-indexed
+        decode layout (DESIGN.md §9) is derived on device at registration —
+        the wire bytes are untouched; decode just drops the stream pointer.
+        Host-registered content without a log serves via the pointer-walk
+        fallback."""
         _validate_content(self.session.model, plan, stream, final_states,
                           enc_model=model)
         with self._lock:
@@ -247,6 +257,9 @@ class DecodeService:
                 self._flush_pending()
             if not isinstance(stream, DeviceStream):
                 stream = self.session.upload_stream(stream)
+            if emission_log is not None and stream.by_symbol is None:
+                stream = with_symbol_layout(stream, emission_log,
+                                            plan.n_symbols)
             self._contents[name] = _Content(
                 stream=stream, plan=plan,
                 final_states=np.asarray(final_states, np.uint32))
@@ -260,6 +273,15 @@ class DecodeService:
         """Monotonic per-content registration counter (0 = never seen)."""
         with self._lock:
             return self._generations.get(name, 0)
+
+    def layout_for(self, name: str) -> str:
+        """The decode layout this content serves under: ``"symbol"`` when
+        its registration carried an emission log (pointer-free walk),
+        ``"pointer"`` otherwise — modulated by the session's layout policy
+        (a ``layout="pointer"`` service never uses the permutation)."""
+        with self._lock:
+            ds = self._contents[name].stream
+        return self.session.executor.select_layout(ds)
 
     def content(self, name: str) -> _Content:
         """The current registered content record (snapshot — the record is
@@ -477,9 +499,10 @@ class DecodeService:
         if len(streams) == 1:
             fused_ds = next(iter(streams.values()))
             word_off = {id(fused_ds): 0}
+            perm_off = {id(fused_ds): 0}
         else:
-            fused_ds, word_off = _fuse_streams(list(streams.values()),
-                                               self.session.executor)
+            fused_ds, word_off, perm_off = _fuse_streams(
+                list(streams.values()), self.session.executor)
         sym_off, total = [], 0
         for _, _, _, n in reqs:
             sym_off.append(total)
@@ -487,6 +510,8 @@ class DecodeService:
         fused = concat_walk_batches(
             [b for _, _, b, _ in reqs], sym_off,
             [word_off[id(self._contents[key[0]].stream)]
+             for _, key, _, _ in reqs],
+            [perm_off[id(self._contents[key[0]].stream)]
              for _, key, _, _ in reqs])
         return self.session.prepare(fused, fused_ds, total), sym_off, total
 
@@ -538,7 +563,9 @@ class DecodeService:
                 encode_compiles=enc.compiles if enc else 0,
                 encode_fallbacks=enc.fallbacks if enc else 0,
                 host_materializations=getattr(
-                    self.session.executor, "host_materializations", 0))
+                    self.session.executor, "host_materializations", 0),
+                symbol_plans=self.session.executor.layout_plans["symbol"],
+                pointer_plans=self.session.executor.layout_plans["pointer"])
 
 
 def _validate_content(model: StaticModel, plan: RecoilPlan, stream,
@@ -586,15 +613,40 @@ def _validate_content(model: StaticModel, plan: RecoilPlan, stream,
                 "than the service model — it would mis-decode")
 
 
+def _fuse_permutations(streams: list[DeviceStream]) -> tuple:
+    """Concatenate ``words_by_symbol`` permutations for a fused dispatch.
+
+    Sym-bucket-aligned (like the word fusion), so per-request ``sym_base``
+    shifts are exact AND stay multiples of ``ways`` (buckets are pow2 >=
+    1024).  Any stream without a permutation downgrades the whole fused
+    group to the pointer walk — layouts never mix inside one executable.
+    Returns ``(by_symbol | None, sym_bucket, perm_off)``.
+    """
+    perm_off: dict[int, int] = {}
+    total = 0
+    for ds in streams:
+        perm_off[id(ds)] = total
+        total += ds.sym_bucket
+    if any(ds.by_symbol is None for ds in streams):
+        return None, 0, {id(ds): 0 for ds in streams}
+    bucket = pow2_bucket(total, 1024)
+    parts = [ds.by_symbol for ds in streams]
+    if bucket > total:
+        parts.append(jnp.zeros(bucket - total, jnp.uint32))
+    return jnp.concatenate(parts), bucket, perm_off
+
+
 def _fuse_streams(streams: list[DeviceStream],
-                  executor=None) -> tuple[DeviceStream, dict]:
+                  executor=None) -> tuple[DeviceStream, dict, dict]:
     """Concatenate resident streams for a cross-content fused dispatch.
 
     Layout preserves each stream's padded bucket window, so word offsets are
     bucket-aligned and the per-request ``q0`` shift is exact.  Device words
     fuse on device (no host round-trip) when every stream is device-resident
     (jnp/sharded backends); otherwise the fused stream is host-side
-    (Pallas, which slabs from host anyway).
+    (Pallas, which slabs from host anyway).  Symbol-layout permutations fuse
+    alongside (:func:`_fuse_permutations`); returns ``(fused, word_off,
+    perm_off)``.
     """
     word_off: dict[int, int] = {}
     total = 0
@@ -602,13 +654,15 @@ def _fuse_streams(streams: list[DeviceStream],
         word_off[id(ds)] = total
         total += ds.bucket
     bucket = pow2_bucket(total, 1024)
+    by_symbol, sym_bucket, perm_off = _fuse_permutations(streams)
     if all(ds.words is not None for ds in streams):
         parts = [ds.words for ds in streams]
         if bucket > total:
             parts.append(jnp.zeros(bucket - total, jnp.uint32))
         fused = DeviceStream(words=jnp.concatenate(parts), host=None,
-                             n_words=total, bucket=bucket)
-        return fused, word_off
+                             n_words=total, bucket=bucket,
+                             by_symbol=by_symbol, sym_bucket=sym_bucket)
+        return fused, word_off, perm_off
     # Mixed residency (pallas: uploaded streams are host-side, ingested
     # ones device-only until lazily materialized) — pull device words down
     # through the executor's per-handle materialization cache when it has
@@ -621,5 +675,6 @@ def _fuse_streams(streams: list[DeviceStream],
     for ds in streams:
         host[word_off[id(ds)]:word_off[id(ds)] + ds.n_words] = \
             np.asarray(materialize(ds)).astype(np.uint32)
-    fused = DeviceStream(words=None, host=host, n_words=total, bucket=bucket)
-    return fused, word_off
+    fused = DeviceStream(words=None, host=host, n_words=total, bucket=bucket,
+                         by_symbol=by_symbol, sym_bucket=sym_bucket)
+    return fused, word_off, perm_off

@@ -1,0 +1,76 @@
+"""Regenerate the golden wire-format vectors.
+
+Run from the repo root:
+
+    PYTHONPATH=src python tests/golden/make_golden.py
+
+Each vector is a committed ``.bin`` (the KIND_RECOIL container bytes — the
+on-wire artifact the format guarantees) plus a ``.npz`` with the encoder
+-side truth: the original symbols, the emission log ``k_of_word`` (which
+the wire format deliberately does NOT carry), and the derived
+``words_by_symbol`` permutation.  test_golden.py asserts
+
+  * decode-side pinning: the committed container decodes to the committed
+    symbols on every backend and BOTH stream layouts;
+  * encode-side pinning: re-encoding the committed symbols reproduces the
+    committed container byte for byte;
+  * layout pinning: the permutation derived from the committed bytes + log
+    equals the committed permutation (the symbol layout's bit-compat claim
+    is against frozen bytes, not a round trip).
+
+Regenerating these files is a WIRE FORMAT CHANGE — do it only when the
+format intentionally changes, and say so in the commit.
+"""
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+from repro.core import container, recoil                      # noqa: E402
+from repro.core.rans import RansParams, StaticModel           # noqa: E402
+from repro.core.vectorized import (encode_interleaved_fast,   # noqa: E402
+                                   words_by_symbol_host)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+VECTORS = [
+    # (name, seed, n_symbols, ways, n_bits, alphabet, n_splits)
+    ("static_w32_s8", 41, 2_000, 32, 11, 256, 8),
+    ("static_w32_ragged", 42, 1_777, 32, 5, 24, 5),
+    ("static_w64_s4", 43, 1_500, 64, 12, 256, 4),
+]
+
+
+def build(name, seed, n, ways, n_bits, alphabet, n_splits):
+    rng = np.random.default_rng(seed)
+    syms = np.concatenate([
+        np.minimum(rng.exponential(alphabet / 6.0,
+                                   size=n - alphabet).astype(np.int64),
+                   alphabet - 1),
+        np.arange(alphabet)])       # full alphabet: model covers every symbol
+    rng.shuffle(syms)
+    model = StaticModel.from_symbols(syms, alphabet,
+                                     RansParams(n_bits=n_bits, ways=ways))
+    enc = encode_interleaved_fast(syms, model)
+    plan = recoil.plan_splits(enc, n_splits)
+    buf = container.pack_recoil(enc, model, plan)
+    with open(os.path.join(HERE, f"{name}.bin"), "wb") as f:
+        f.write(buf)
+    np.savez_compressed(
+        os.path.join(HERE, f"{name}.npz"),
+        symbols=syms.astype(np.int64),
+        k_of_word=enc.k_of_word.astype(np.int64),
+        by_symbol=words_by_symbol_host(enc.stream, enc.k_of_word, n),
+        n_bits=np.int64(n_bits), ways=np.int64(ways),
+        n_splits=np.int64(n_splits))
+    print(f"{name}: {len(buf)} container bytes, {enc.n_words} words, "
+          f"{plan.n_threads} threads")
+
+
+if __name__ == "__main__":
+    for vec in VECTORS:
+        build(*vec)

@@ -1,0 +1,294 @@
+"""Cross-backend x cross-layout differential conformance suite.
+
+One harness (:func:`check_conformance`) decodes the same content through
+every decode tier — python oracle, jnp walk, Pallas kernel (interpret), and
+(in a forced-4-device subprocess) the sharded shard_map executor — under
+BOTH stream layouts of the plan IR:
+
+  * ``pointer`` — the classic Recoil walk (stream pointer + renorm cumsum);
+  * ``symbol``  — the pointer-free ``words_by_symbol`` walk (DESIGN.md §9),
+
+and asserts bit-exact agreement with the oracle and the original symbols.
+Coverage axes: static and adaptive (ContextModel) coding, ragged split
+counts, thinned/downscaled plans (paper §3.3 entry deletion), and fused
+microbatch dispatches (same-content, cross-content, and mixed-layout groups
+that must downgrade to the pointer walk as one unit).
+
+The harness is hypothesis-driven where hypothesis is installed (seeded,
+derandomized profiles from conftest.py) and always runs a deterministic
+parametrized matrix, so a clean environment still exercises every backend
+pair.  Sessions/services are cached per (impl, layout, ways) across cases —
+the suite also acts as a bucketed-executable reuse test (compile counts
+stay bounded while contents vary).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import recoil
+from repro.core.adaptive import ContextModel, walk_decode_split_adaptive
+from repro.core.engine import DecoderSession, with_symbol_layout
+from repro.core.rans import RansParams, StaticModel
+from repro.core.recoil import build_split_states, combine_plan
+from repro.core.vectorized import (WalkBatch, encode_adaptive_fast,
+                                   encode_interleaved_fast,
+                                   walk_decode_batch,
+                                   walk_decode_batch_symbol,
+                                   words_by_symbol_host)
+from repro.runtime.serve import DecodeService
+
+try:
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+LAYOUTS = ("pointer", "symbol")
+
+# ----------------------------------------------------------------------
+# Fixed models (one per ways) + cached sessions: every case reuses the
+# same slot tables and bucketed executables.
+# ----------------------------------------------------------------------
+
+_MODELS: dict = {}
+_SESSIONS: dict = {}
+
+
+def _model(ways: int) -> StaticModel:
+    if ways not in _MODELS:
+        rng = np.random.default_rng(1234 + ways)
+        ref = np.concatenate([
+            np.minimum(rng.exponential(40.0, size=50_000).astype(np.int64),
+                       255),
+            np.arange(256)])           # every symbol has nonzero frequency
+        _MODELS[ways] = StaticModel.from_symbols(
+            ref, 256, RansParams(n_bits=11, ways=ways))
+    return _MODELS[ways]
+
+
+def _session(impl: str, layout: str, ways: int) -> DecoderSession:
+    key = (impl, layout, ways)
+    if key not in _SESSIONS:
+        _SESSIONS[key] = DecoderSession(_model(ways), impl=impl,
+                                        layout=layout)
+    return _SESSIONS[key]
+
+
+def _symbols(seed: int, n: int, ways: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.minimum(rng.exponential(40.0, size=n).astype(np.int64), 255)
+
+
+# ----------------------------------------------------------------------
+# The differential harness
+# ----------------------------------------------------------------------
+
+def check_conformance(syms: np.ndarray, ways: int, n_splits: int,
+                      thin: int | None = None) -> None:
+    """Decode ``syms`` through oracle / jnp / pallas x pointer / symbol and
+    assert bit-exact agreement (optionally on a thinned plan)."""
+    model = _model(ways)
+    n = len(syms)
+    enc = encode_interleaved_fast(syms, model)
+    plan = recoil.plan_splits(enc, n_splits)
+    if thin is not None:
+        plan = combine_plan(plan, thin)
+
+    oracle = recoil.decode_recoil(plan, enc.stream, enc.final_states, model)
+    assert (oracle == syms).all(), "oracle decode disagrees with input"
+
+    batch = WalkBatch.from_splits(
+        build_split_states(plan, enc.final_states), plan.ways)
+    wbs = words_by_symbol_host(enc.stream, enc.k_of_word, n)
+    walk_ptr = walk_decode_batch(batch, enc.stream, model, n)
+    walk_sym = walk_decode_batch_symbol(batch, wbs, model, n)
+    assert (walk_ptr == oracle).all(), "jnp pointer walk != oracle"
+    assert (walk_sym == oracle).all(), "jnp symbol walk != oracle"
+
+    for impl in ("jnp", "pallas"):
+        for layout in LAYOUTS:
+            sess = _session(impl, layout, ways)
+            ds = sess.upload_stream(enc.stream)
+            if layout == "symbol":
+                ds = with_symbol_layout(ds, enc.k_of_word, n)
+            out = np.asarray(sess.decode(plan, ds, enc.final_states))
+            assert (out == oracle).all(), \
+                f"{impl}/{layout} disagrees with oracle " \
+                f"(n={n}, ways={ways}, splits={plan.n_threads}, thin={thin})"
+
+
+DETERMINISTIC_CASES = [
+    # (seed, n, ways, n_splits, thin)
+    (0, 3_000, 32, 16, None),
+    (1, 2_047, 32, 7, 3),        # ragged split count + thinned
+    (2, 4_096, 32, 1, None),     # single thread (no split metadata)
+    (3, 2_500, 64, 24, 5),       # wide interleave + deep downscale
+    (4, 1_537, 16, 4, None),     # narrow interleave, odd length
+    (5, 3_333, 32, 12, 1),       # thinned to a single thread
+]
+
+
+@pytest.mark.parametrize("seed,n,ways,n_splits,thin", DETERMINISTIC_CASES)
+def test_conformance_matrix(seed, n, ways, n_splits, thin):
+    check_conformance(_symbols(seed, n, ways), ways, n_splits, thin)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2 ** 16), st.integers(600, 5_000),
+           st.sampled_from([32, 64]), st.integers(1, 24),
+           st.one_of(st.none(), st.integers(1, 8)))
+    def test_conformance_hypothesis(seed, n, ways, n_splits, thin):
+        check_conformance(_symbols(seed, n, ways), ways, n_splits, thin)
+
+
+# ----------------------------------------------------------------------
+# Adaptive (ContextModel) conformance: oracle x pointer x symbol
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,n,n_splits", [(7, 4_000, 12), (8, 2_321, 5)])
+def test_conformance_adaptive(seed, n, n_splits):
+    rng = np.random.default_rng(seed)
+    ctx = (np.arange(n) // 512 % 4).astype(np.int64)
+    cm = ContextModel.from_scale_table(
+        [8.0, 20.0, 40.0, 80.0], ctx, 256, RansParams(n_bits=11, ways=32))
+    syms = np.clip(rng.normal(128, 5 + 20 * ctx, size=n), 0,
+                   255).astype(np.int64)
+    enc = encode_adaptive_fast(syms, cm)
+    plan = recoil.plan_splits(enc, n_splits)
+
+    oracle = np.full(n, -1, np.int64)
+    for split in build_split_states(plan, enc.final_states):
+        walk_decode_split_adaptive(split, enc.stream, cm, oracle)
+    assert (oracle == syms).all()
+
+    batch = WalkBatch.from_splits(
+        build_split_states(plan, enc.final_states), plan.ways)
+    wbs = words_by_symbol_host(enc.stream, enc.k_of_word, n)
+    ptr = walk_decode_batch(batch, enc.stream, None, n, ctx_model=cm)
+    sym = walk_decode_batch_symbol(batch, wbs, None, n, ctx_model=cm)
+    assert (ptr == oracle).all(), "adaptive pointer walk != oracle"
+    assert (sym == oracle).all(), "adaptive symbol walk != oracle"
+
+
+# ----------------------------------------------------------------------
+# Fused microbatch dispatches (service tier)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_conformance_fused_microbatch(impl):
+    """Cross-content fused dispatch groups: all-symbol groups fuse the
+    permutations and stay on the symbol walk; a group containing one
+    pointer-only content downgrades AS A UNIT; results are bit-exact
+    against the per-content payloads either way — including repeated
+    requests for one content and downscaled thread counts."""
+    rng = np.random.default_rng(99)
+    payloads = {
+        f"c{i}": np.minimum(
+            rng.exponential(35.0, size=1800 + 211 * i).astype(np.int64), 255)
+        for i in range(4)}
+    model = StaticModel.from_symbols(
+        np.concatenate(list(payloads.values())), 256,
+        RansParams(n_bits=11, ways=32))
+    svc = DecodeService(model, impl=impl, microbatch=16)
+    names = list(payloads)
+    svc.ingest_batch({n: payloads[n] for n in names[:3]}, 16)  # symbol-capable
+    enc = encode_interleaved_fast(payloads[names[3]], model)
+    svc.register(names[3], recoil.plan_splits(enc, 16), enc.stream,
+                 enc.final_states)                             # pointer-only
+    assert [svc.layout_for(n) for n in names] == \
+        ["symbol", "symbol", "symbol", "pointer"]
+
+    # All-symbol fused group (repeats + ragged thread counts).
+    before = svc.stats.symbol_plans
+    reqs = [(names[0], 8), (names[1], 8), (names[0], 8), (names[2], 8)]
+    tickets = [svc.submit(nm, th) for nm, th in reqs]
+    svc.flush()
+    for (nm, _), t in zip(reqs, tickets):
+        assert (np.asarray(t.result()) == payloads[nm]).all()
+    assert svc.stats.symbol_plans == before + 1
+
+    # Mixed group: the pointer-only member downgrades the whole fusion.
+    before_ptr = svc.stats.pointer_plans
+    reqs = [(names[0], 8), (names[3], 8)]
+    tickets = [svc.submit(nm, th) for nm, th in reqs]
+    svc.flush()
+    for (nm, _), t in zip(reqs, tickets):
+        assert (np.asarray(t.result()) == payloads[nm]).all()
+    assert svc.stats.pointer_plans == before_ptr + 1
+
+    # Downscaled single dispatches agree per layout too.
+    for nm in (names[0], names[3]):
+        for th in (1, 3, 16):
+            assert (np.asarray(svc.decode(nm, th)) == payloads[nm]).all()
+
+
+# ----------------------------------------------------------------------
+# Sharded executor (forced-4-device subprocess)
+# ----------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_conformance_sharded_subprocess():
+    """The same differential matrix on the sharded tier: pointer and
+    symbol layouts, even + ragged split counts, thinned plans, and a fused
+    microbatch — all bit-exact vs the jnp walk inside one 4-device
+    subprocess."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        import jax
+        assert len(jax.devices()) == 4
+        from repro.core import recoil
+        from repro.core.engine import DecoderSession, with_symbol_layout
+        from repro.core.rans import RansParams, StaticModel
+        from repro.core.recoil import build_split_states, combine_plan
+        from repro.core.vectorized import encode_interleaved_fast
+        from repro.runtime.serve import DecodeService
+
+        rng = np.random.default_rng(17)
+        ref = np.concatenate([np.minimum(
+            rng.exponential(40.0, 50_000).astype(np.int64), 255),
+            np.arange(256)])
+        model = StaticModel.from_symbols(ref, 256,
+                                         RansParams(n_bits=11, ways=32))
+        sess = DecoderSession(model, impl="sharded")
+        for n, n_splits, thin in [(40_000, 16, None), (25_000, 7, 3),
+                                  (30_000, 24, 5)]:
+            syms = np.minimum(
+                rng.exponential(40.0, n).astype(np.int64), 255)
+            enc = encode_interleaved_fast(syms, model)
+            plan = recoil.plan_splits(enc, n_splits)
+            if thin is not None:
+                plan = combine_plan(plan, thin)
+            ds = sess.upload_stream(enc.stream)
+            ptr = np.asarray(sess.decode(plan, ds, enc.final_states))
+            ds_sym = with_symbol_layout(ds, enc.k_of_word, n)
+            sym = np.asarray(sess.decode(plan, ds_sym, enc.final_states))
+            assert (ptr == syms).all(), (n, n_splits, thin, "pointer")
+            assert (sym == syms).all(), (n, n_splits, thin, "symbol")
+        assert sess.executor.layout_plans["symbol"] == 3
+
+        # fused microbatch through the sharded service, symbol layout
+        payloads = {f"s{i}": np.minimum(
+            rng.exponential(35.0, 4_000 + 321 * i).astype(np.int64), 255)
+            for i in range(3)}
+        svc = DecodeService(model, impl="sharded", microbatch=8)
+        svc.ingest_batch(payloads, 16)
+        tickets = [svc.submit(nm, 8) for nm in payloads]
+        svc.flush()
+        for nm, t in zip(payloads, tickets):
+            assert (np.asarray(t.result()) == payloads[nm]).all(), nm
+        assert svc.stats.symbol_plans > 0
+        print("OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": SRC}, timeout=900)
+    assert out.returncode == 0, (out.stderr[-3000:], out.stdout[-500:])
+    assert "OK" in out.stdout

@@ -56,6 +56,7 @@ def test_sharding_resolver_no_mesh_is_noop():
     assert spec == P("data", None, None) or isinstance(spec, P)
 
 
+@pytest.mark.slow
 def test_sharding_resolver_divisibility_and_used_axes():
     """Mesh-dependent checks run in a subprocess with 16 fake devices."""
     code = textwrap.dedent("""

@@ -1,0 +1,118 @@
+"""Golden wire-format vectors: the bit-compat contract against frozen bytes.
+
+Round-trip tests prove encoder and decoder agree with EACH OTHER; only a
+pinned artifact proves they agree with every build that came before.  The
+``tests/golden/`` vectors freeze KIND_RECOIL containers (the on-wire bytes)
+plus the encoder-side emission log, so:
+
+  * any decoder change that mis-reads the existing format fails here even
+    if its matching encoder change would have round-tripped;
+  * any encoder change that shifts the wire bytes fails the byte-equality
+    check even if it still decodes;
+  * the symbol-indexed layout's claim — derived permutation, identical wire
+    bytes (DESIGN.md §9) — is checked against committed bytes: the layout
+    derivation from frozen (stream, log) must equal the frozen permutation,
+    and both layouts must decode the frozen container identically.
+
+Regeneration (= an intentional format change): tests/golden/make_golden.py.
+"""
+
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import container, recoil
+from repro.core.engine import (DecoderSession, derive_symbol_layout,
+                               pow2_bucket, with_symbol_layout)
+from repro.core.rans import RansParams
+from repro.core.vectorized import (encode_interleaved_fast,
+                                   words_by_symbol_host)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+NAMES = sorted(os.path.splitext(os.path.basename(p))[0]
+               for p in glob.glob(os.path.join(GOLDEN, "*.bin")))
+
+
+def _load(name):
+    with open(os.path.join(GOLDEN, f"{name}.bin"), "rb") as f:
+        buf = f.read()
+    npz = np.load(os.path.join(GOLDEN, f"{name}.npz"))
+    params = RansParams(n_bits=int(npz["n_bits"]), ways=int(npz["ways"]))
+    return buf, npz, params
+
+
+def test_vectors_are_committed():
+    assert len(NAMES) >= 3, f"golden vectors missing from {GOLDEN}"
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_golden_container_decodes_on_all_backends(name):
+    buf, npz, params = _load(name)
+    parsed = container.parse(buf, params)
+    assert parsed.kind == container.KIND_RECOIL
+    syms = npz["symbols"]
+    assert parsed.n_symbols == len(syms)
+
+    # Oracle against the committed output.
+    out = recoil.decode_recoil(parsed.plan, parsed.stream,
+                               parsed.final_states, parsed.model)
+    assert (out == syms).all(), "oracle decode of frozen bytes changed"
+
+    # Engine backends x layouts (the emission log is the npz side-channel:
+    # the container deliberately does not carry it).
+    for impl in ("jnp", "pallas"):
+        sess = DecoderSession(parsed.model, impl=impl)
+        ds = sess.upload_stream(parsed.stream)
+        ptr = np.asarray(sess.decode(parsed.plan, ds, parsed.final_states))
+        ds_sym = with_symbol_layout(ds, npz["k_of_word"], len(syms))
+        sym = np.asarray(sess.decode(parsed.plan, ds_sym,
+                                     parsed.final_states))
+        assert (ptr == syms).all(), f"{impl}/pointer regressed on {name}"
+        assert (sym == syms).all(), f"{impl}/symbol regressed on {name}"
+
+    # Thinned (downscaled) variants of the frozen metadata still decode.
+    for n_threads in (1, 2, parsed.plan.n_threads):
+        thin = recoil.combine_plan(parsed.plan, n_threads)
+        out = recoil.decode_recoil(thin, parsed.stream, parsed.final_states,
+                                   parsed.model)
+        assert (out == syms).all()
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_golden_reencode_is_byte_identical(name):
+    """Encoder pinning: same symbols + same model -> the committed bytes."""
+    buf, npz, params = _load(name)
+    parsed = container.parse(buf, params)
+    enc = encode_interleaved_fast(npz["symbols"], parsed.model)
+    plan = recoil.plan_splits(enc, int(npz["n_splits"]))
+    again = container.pack_recoil(enc, parsed.model, plan)
+    assert again == buf, (
+        f"re-encoding {name} produced different wire bytes — the format "
+        "changed; if intentional, regenerate tests/golden/ and say so")
+    assert (enc.k_of_word == npz["k_of_word"]).all(), \
+        "emission log drifted from the frozen vector"
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_golden_symbol_layout_matches_frozen_permutation(name):
+    """Layout pinning: host and device derivations from the frozen
+    (stream, log) both equal the frozen ``words_by_symbol``."""
+    buf, npz, params = _load(name)
+    parsed = container.parse(buf, params)
+    n = len(npz["symbols"])
+    host = words_by_symbol_host(parsed.stream, npz["k_of_word"], n)
+    assert (host == npz["by_symbol"]).all(), "host derivation drifted"
+
+    import jax.numpy as jnp
+    bucket = pow2_bucket(len(parsed.stream), 1024)
+    words = jnp.asarray(np.pad(parsed.stream.astype(np.uint32),
+                               (0, bucket - len(parsed.stream))))
+    kpad = np.full(bucket, np.iinfo(np.int32).max, np.int32)
+    kpad[:len(parsed.stream)] = npz["k_of_word"].astype(np.int32)
+    dev = derive_symbol_layout(words, jnp.asarray(kpad),
+                               sym_bucket=pow2_bucket(n, 1024))
+    assert (np.asarray(dev)[:n] == npz["by_symbol"]).all(), \
+        "device derivation drifted"
+    assert not np.asarray(dev)[n:].any()

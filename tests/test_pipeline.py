@@ -319,6 +319,7 @@ def test_threaded_stress_jnp():
     exec(textwrap.dedent(STRESS_BODY.format(impl="jnp")), ns)  # noqa: S102
 
 
+@pytest.mark.slow
 def test_threaded_stress_sharded_multidevice():
     """The same stress contract on the sharded executor over 4 forced host
     devices (subprocess: XLA flags must precede jax init)."""
@@ -450,3 +451,142 @@ def test_capability_registry_invalidates_on_reingest():
         snap = reg.snapshot()
         assert snap["plans_cached"] == 1
         assert snap["containers_cached"] == 1
+
+
+# ----------------------------------------------------------------------
+# Ticket cancellation + request timeouts
+# ----------------------------------------------------------------------
+
+def _frozen_broker(svc, max_queue=512):
+    """A broker whose worker can never dispatch on its own (one quantized
+    size far above anything queued + an hour-scale deadline), so tests
+    control exactly when tickets leave the lanes."""
+    return svc.start_pipeline(
+        config=ControllerConfig(max_batch=64, batch_sizes=(64,),
+                                target_delay_ms=3_600_000.0),
+        max_queue=max_queue)
+
+
+def test_cancel_before_dispatch_drops_at_group_build():
+    from repro.runtime.pipeline import TicketCancelled
+    payloads = _payloads(n_contents=1)
+    svc = _service(payloads)
+    b = _frozen_broker(svc)
+    try:
+        t_cancel = svc.submit("c0", 4)
+        t_live = svc.submit("c0", 4)
+        assert t_cancel.cancel() is True
+        assert t_cancel.cancel() is False          # already resolved
+        with pytest.raises(TicketCancelled):
+            t_cancel.result(timeout=1)
+    finally:
+        svc.stop_pipeline()       # close() flushes the partial lane
+    # The cancelled ticket was dropped when the worker built the group:
+    # the live request completed, the withdrawn one never hit the engine.
+    assert (np.asarray(t_live.result(timeout=30)) == payloads["c0"]).all()
+    assert b.snapshot()["cancelled"] == 1
+    assert b.snapshot()["completed"] == 1
+
+
+def test_cancel_entire_group_skips_dispatch():
+    payloads = _payloads(n_contents=1)
+    svc = _service(payloads)
+    b = _frozen_broker(svc)
+    try:
+        tickets = [svc.submit("c0", 4) for _ in range(3)]
+        for t in tickets:
+            assert t.cancel()
+    finally:
+        svc.stop_pipeline()
+    snap = b.snapshot()
+    assert snap["cancelled"] == 3
+    # No group ever reached the engine for the withdrawn requests.
+    assert snap["dispatch_groups"] == 0
+    assert svc.stats.flushes == 0
+
+
+def test_cancel_in_flight_discards_result():
+    """A cancel that lands while the dispatch is running must win: the
+    worker's late ``_fulfill`` is discarded and ``result()`` raises."""
+    from repro.runtime.pipeline import TicketCancelled
+    payloads = _payloads(n_contents=1)
+    svc = _service(payloads)
+    with svc.start_pipeline(
+            config=ControllerConfig(max_batch=2, batch_sizes=(2,),
+                                    target_delay_ms=5.0)) as b:
+        gate = threading.Event()
+        orig = svc.dispatch_group
+
+        def slow_dispatch(requests, tickets):
+            gate.set()                    # in flight now
+            time.sleep(0.15)
+            return orig(requests, tickets)
+
+        svc.dispatch_group = slow_dispatch
+        try:
+            t1 = svc.submit("c0", 4)
+            t2 = svc.submit("c0", 4)      # completes the size-2 group
+            assert gate.wait(timeout=30)
+            assert t1.cancel() is True    # races the running dispatch
+            with pytest.raises(TicketCancelled):
+                t1.result(timeout=30)
+            assert (np.asarray(t2.result(timeout=30))
+                    == payloads["c0"]).all()
+        finally:
+            svc.dispatch_group = orig
+    # cancel() after completion reports False and the result survives.
+    assert t2.cancel() is False
+    assert (np.asarray(t2.result()) == payloads["c0"]).all()
+
+
+def test_timeout_while_queued_then_cancel():
+    payloads = _payloads(n_contents=1)
+    svc = _service(payloads)
+    b = _frozen_broker(svc)
+    try:
+        t = svc.submit("c0", 4)
+        t0 = time.perf_counter()
+        with pytest.raises(TimeoutError):
+            t.result(timeout=0.1)         # still queued: the frozen worker
+        assert time.perf_counter() - t0 < 5.0
+        assert not t.done()
+        assert t.cancel() is True         # the documented follow-up
+    finally:
+        svc.stop_pipeline()
+    assert b.snapshot()["cancelled"] == 1
+
+
+def test_cancelled_ingest_never_encodes():
+    from repro.runtime.pipeline import TicketCancelled
+    payloads = _payloads(n_contents=1)
+    svc = _service(payloads)
+    b = svc.start_pipeline()
+    try:
+        orig = svc.ingest
+
+        def slow_ingest(name, symbols, n_splits):
+            time.sleep(0.2)
+            return orig(name, symbols, n_splits)
+
+        svc.ingest = slow_ingest
+        t_busy = b.submit_ingest("busy", payloads["c0"], 8)
+        # Wait until the worker has POPPED the busy event (queue drains to
+        # 0 while it sleeps inside slow_ingest), then queue + cancel the
+        # target while the worker is provably occupied — the cancel always
+        # lands before the next dispatch-group build.
+        deadline = time.perf_counter() + 30
+        while (b.snapshot()["ingest_queue_depth"] > 0
+               and time.perf_counter() < deadline):
+            time.sleep(0.005)
+        t_cancel = b.submit_ingest("never", payloads["c0"], 8)
+        assert t_cancel.cancel() is True
+        with pytest.raises(TicketCancelled):
+            t_cancel.result(timeout=1)
+        assert isinstance(t_busy.result(timeout=60), recoil.RecoilPlan)
+        b.drain(timeout=60)
+    finally:
+        svc.ingest = orig
+        svc.stop_pipeline()
+    assert svc.generation("busy") > 0
+    assert svc.generation("never") == 0       # dropped before encoding
+    assert b.snapshot()["cancelled"] == 1

@@ -11,6 +11,11 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# Every test here spawns a forced-multi-device python subprocess.
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
