@@ -37,6 +37,7 @@ import time
 import numpy as np
 
 from repro.core.rans import RansParams, StaticModel
+from repro.runtime.metrics import LatencyWindow
 from repro.runtime.pipeline import BrokerSaturated, ControllerConfig
 from repro.runtime.serve import DecodeService
 
@@ -54,6 +55,13 @@ FULL = dict(decode_symbols=32_768, ingest_symbols=524_288,
             n_decode_events=720, n_ingest_events=56)
 
 ARRIVAL_RATE_HZ = 400.0     # Poisson stamp spacing (replayed at saturation)
+
+# Paced SLO replay: the trace timestamps honored (slowed by PACED_SCALE), a
+# LatencyWindow of per-ticket end-to-end latencies, and a CI-guarded p99
+# budget — the broker must not just sustain saturation throughput, it must
+# hold tail latency when the offered load leaves it headroom.
+PACED_SCALE = 4.0           # pacing: trace gaps stretched by this factor
+PACED_P99_BUDGET_MS = 500.0
 
 
 def _make_trace(cfg: dict, rng) -> list:
@@ -138,6 +146,37 @@ def _replay_pipeline(svc, broker, trace, hot, big) -> tuple[float, int]:
     return dt, backpressure
 
 
+def _replay_paced(svc, broker, trace, big) -> LatencyWindow:
+    """SLO replay: honor the trace's Poisson timestamps (stretched by
+    ``PACED_SCALE`` so the load is paced, not saturating) and record every
+    decode ticket's end-to-end latency (submit -> fulfilled) into a
+    :class:`LatencyWindow`.  The p99 of that window is the CI guard: a
+    broker that holds throughput by letting queues grow unboundedly
+    would fail it."""
+    window = LatencyWindow()
+    tickets = []
+    t0 = time.perf_counter()
+    for kind, name, cap, stamp in trace:
+        lag = t0 + stamp * PACED_SCALE - time.perf_counter()
+        if lag > 0:
+            time.sleep(lag)
+        try:
+            if kind == "decode":
+                tickets.append(svc.submit(name, cap))
+            else:
+                broker.submit_ingest(name, big[name], INGEST_SPLITS)
+        except BrokerSaturated:
+            # A paced load should never saturate a healthy broker; dropping
+            # (rather than retrying) keeps the pacing honest and the guard
+            # sees the loss as missing samples + inflated queue latency.
+            pass
+    broker.drain(timeout=600)
+    for t in tickets:
+        np.asarray(t.result(timeout=60))
+        window.record(t.completed_at - t.submitted_at)
+    return window
+
+
 def _check_downscaling(svc, hot) -> None:
     """Acceptance: downscaled-capability responses are bit-exact vs the
     full-parallelism decode (the paper's §3.3 claim, end to end)."""
@@ -189,6 +228,15 @@ def run(quick: bool = False) -> list:
     recompiles = (stats.compiles - compiles_before
                   + stats.encode_compiles - enc_before)
     fallbacks = stats.encode_fallbacks - fallbacks_before
+    # Paced SLO phase runs after the recompile accounting: its slow arrivals
+    # legitimately mint new shapes (e.g. single-content ingest dispatches the
+    # saturation replay always coalesces), which are warmness questions for
+    # the saturation guard, not the tail-latency one.
+    _replay_paced(pipe_svc, broker, trace, big)   # warm the paced shapes
+    paced = _replay_paced(pipe_svc, broker, trace, big).summary_ms()
+    assert paced["p99_ms"] <= PACED_P99_BUDGET_MS, \
+        f"paced-replay p99 {paced['p99_ms']:.1f}ms over the " \
+        f"{PACED_P99_BUDGET_MS}ms SLO budget"
     snap = broker.snapshot()
     pipe_svc.stop_pipeline()
 
@@ -214,6 +262,10 @@ def run(quick: bool = False) -> list:
         "wait_ms": snap["wait"],
         "service_ms": snap["service"],
         "ingest_service_ms": snap["ingest_service"],
+        "paced_latency_ms": paced,
+        "paced_p99_ms": paced["p99_ms"],
+        "paced_p99_budget_ms": PACED_P99_BUDGET_MS,
+        "paced_scale": PACED_SCALE,
         "dispatch_groups": snap["dispatch_groups"],
         "ingest_dispatches": snap["ingest_dispatches"],
         "downscaling_bit_exact": True,   # _check_downscaling asserted
@@ -228,4 +280,7 @@ def run(quick: bool = False) -> list:
         {"bench": "pipeline", "path": "broker_overlapped", "events": n_events,
          "events_per_s": summary["pipeline_events_per_s"],
          "recompiles": recompiles},
+        {"bench": "pipeline", "path": "broker_paced_slo", "events": n_events,
+         "events_per_s": "", "recompiles": "",
+         "p99_ms": round(paced["p99_ms"], 1)},
     ]

@@ -1,0 +1,175 @@
+"""Streaming content engine: incremental re-ingest + chunked decode.
+
+Two claims from DESIGN.md §10, measured end to end through the serving
+tier and guarded in CI:
+
+  * **Incremental re-ingest** — appending a 1/16-size delta to an ingested
+    asset via ``DecodeService.extend`` resumes the encoder's cached rANS
+    state chain and encodes ONLY the suffix, so a warm extend must be
+    >= ``SPEEDUP_FLOOR`` x faster than the full re-ingest of the grown
+    asset, with **0 encode recompiles** in the measured window (every
+    extend lands in the warmed suffix-shaped executable buckets).  The
+    spliced result is bit-exact with the full re-encode: the benchmark
+    decodes both registrations at several capabilities and compares.
+  * **Chunked streaming decode** — ``submit_stream`` partitions the
+    request's split rows into completion-ordered chunks and dispatches one
+    executable per chunk, so the time to the first decoded symbols is the
+    first chunk's work, not the asset's.  The guard asserts
+    time-to-first-chunk < ``TTFC_FRACTION`` x the whole-asset decode
+    latency, and that the concatenated chunks equal the whole decode.
+
+Both phases run shape-warm (a full dry run of the measured sequence on
+separate warmup names — identical sizes, hence identical bucketed
+executables).  Writes ``benchmarks/results/streaming.json`` (CI artifact)
+and returns CSV rows for the run.py driver.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.rans import RansParams, StaticModel
+from repro.runtime.serve import DecodeService
+
+SPLITS = 64                 # server-side planned parallelism
+CAPABILITIES = (8, 64)      # decode parity checked at these thread counts
+N_CHUNKS = 8                # streaming chunk count
+STREAM_THREADS = 64         # capability used for the TTFC measurement
+
+SPEEDUP_FLOOR = 4.0         # warm extend vs full re-ingest of the grown asset
+TTFC_FRACTION = 0.85        # first chunk must beat this fraction of whole
+
+QUICK = dict(base_symbols=128_000, n_extends=4, reps=3)
+FULL = dict(base_symbols=192_000, n_extends=8, reps=5)
+
+
+def _payload(rng, n):
+    return np.minimum(rng.exponential(35.0, size=n).astype(np.int64), 255)
+
+
+def _run_sequence(svc, name_inc, name_full, base, deltas):
+    """One incremental-vs-full sequence: ingest ``base`` under ``name_inc``
+    then extend it with each delta, re-ingesting the grown concatenation
+    under ``name_full`` alongside.  Returns (extend_s, full_s) per step."""
+    svc.ingest(name_inc, base, SPLITS)
+    grown = base
+    extend_s, full_s = [], []
+    for delta in deltas:
+        grown = np.concatenate([grown, delta])
+        t0 = time.perf_counter()
+        svc.extend(name_inc, delta)
+        extend_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        svc.ingest(name_full, grown, SPLITS)
+        full_s.append(time.perf_counter() - t0)
+    return extend_s, full_s, grown
+
+
+def _check_parity(svc, name_inc, name_full, grown):
+    """The spliced asset must decode bit-exactly — vs the ground truth AND
+    vs the full re-ingest, at every checked capability."""
+    for cap in CAPABILITIES:
+        inc = np.asarray(svc.decode(name_inc, cap))
+        full = np.asarray(svc.decode(name_full, cap))
+        assert (inc == grown).all(), f"extend mis-decodes at cap={cap}"
+        assert (inc == full).all(), f"extend != full re-ingest at cap={cap}"
+
+
+def _measure_ttfc(svc, name, grown, reps):
+    """Median time-to-first-chunk (submit_stream) vs median whole-asset
+    decode latency, plus a bit-exactness check on the assembled chunks."""
+    # warm both paths
+    jax.block_until_ready(svc.decode(name, STREAM_THREADS))
+    ticket = svc.submit_stream(name, STREAM_THREADS, n_chunks=N_CHUNKS)
+    assert (np.asarray(ticket.result()) == grown).all(), "chunks != asset"
+    whole_s, first_s, last_s = [], [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(svc.decode(name, STREAM_THREADS))
+        whole_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        ticket = svc.submit_stream(name, STREAM_THREADS, n_chunks=N_CHUNKS)
+        jax.block_until_ready(ticket.chunk(0))
+        first_s.append(time.perf_counter() - t0)
+        jax.block_until_ready(ticket.chunk(ticket.n_chunks - 1))
+        last_s.append(time.perf_counter() - t0)
+    return (float(np.median(whole_s)), float(np.median(first_s)),
+            float(np.median(last_s)))
+
+
+def run(quick: bool = False) -> list:
+    cfg = QUICK if quick else FULL
+    rng = np.random.default_rng(23)
+    base = _payload(rng, cfg["base_symbols"])
+    delta_n = cfg["base_symbols"] // 16
+    deltas = [_payload(rng, delta_n) for _ in range(cfg["n_extends"])]
+    model = StaticModel.from_symbols(
+        np.concatenate([base] + deltas), 256, RansParams(n_bits=11, ways=32))
+    svc = DecodeService(model, impl="jnp")
+
+    # ---- warmup: the full measured sequence on warmup names (identical
+    # sizes -> identical bucketed executables), plus the decode shapes
+    _, _, grown_w = _run_sequence(svc, "warm_inc", "warm_full", base, deltas)
+    _check_parity(svc, "warm_inc", "warm_full", grown_w)
+    _measure_ttfc(svc, "warm_full", grown_w, 1)
+
+    # ---- measured window: 0 encode recompiles allowed
+    enc_compiles_before = svc.stats.encode_compiles
+    extend_s, full_s, grown = _run_sequence(svc, "inc", "full", base, deltas)
+    recompiles = svc.stats.encode_compiles - enc_compiles_before
+    _check_parity(svc, "inc", "full", grown)
+
+    extend_ms = float(np.median(extend_s)) * 1e3
+    full_ms = float(np.median(full_s)) * 1e3
+    speedup = full_ms / extend_ms
+
+    whole_s_med, first_s_med, last_s_med = _measure_ttfc(
+        svc, "inc", grown, cfg["reps"])
+    ttfc_ratio = first_s_med / whole_s_med
+
+    assert recompiles == 0, \
+        f"{recompiles} encode recompiles in the measured extend window"
+    assert speedup >= SPEEDUP_FLOOR, \
+        f"incremental speedup {speedup:.2f}x < floor {SPEEDUP_FLOOR}x"
+    assert ttfc_ratio < TTFC_FRACTION, \
+        f"first chunk at {ttfc_ratio:.2f}x of whole-asset latency " \
+        f"(floor {TTFC_FRACTION}x) — chunking is not pipelining"
+
+    summary = {
+        "base_symbols": cfg["base_symbols"],
+        "delta_symbols": delta_n,
+        "n_extends": cfg["n_extends"],
+        "splits": SPLITS,
+        "extend_ms_median": round(extend_ms, 3),
+        "full_reingest_ms_median": round(full_ms, 3),
+        "incremental_speedup": round(speedup, 2),
+        "speedup_floor": SPEEDUP_FLOOR,
+        "recompiles_measured": recompiles,
+        "extend_bit_exact": True,        # _check_parity asserted
+        "n_chunks": N_CHUNKS,
+        "stream_threads": STREAM_THREADS,
+        "whole_decode_ms": round(whole_s_med * 1e3, 3),
+        "first_chunk_ms": round(first_s_med * 1e3, 3),
+        "all_chunks_ms": round(last_s_med * 1e3, 3),
+        "ttfc_ratio": round(ttfc_ratio, 3),
+        "ttfc_fraction_budget": TTFC_FRACTION,
+        "chunks_bit_exact": True,        # _measure_ttfc asserted
+        "service_stats": svc.stats.snapshot(),
+    }
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/streaming.json", "w") as f:
+        json.dump(summary, f, indent=2)
+    return [
+        {"bench": "streaming", "path": "extend_vs_full",
+         "speedup": summary["incremental_speedup"],
+         "ms": summary["extend_ms_median"],
+         "recompiles": recompiles},
+        {"bench": "streaming", "path": "first_chunk_vs_whole",
+         "speedup": round(1.0 / ttfc_ratio, 2),
+         "ms": summary["first_chunk_ms"], "recompiles": ""},
+    ]

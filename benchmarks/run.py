@@ -11,6 +11,7 @@ Emits CSV to stdout and benchmarks/results/*.csv.  Suites:
     engine            DESIGN §4    cache-warm DecoderSession vs one-shot path
     encode            DESIGN §5    cache-warm ingest engine vs host encode+plan
     pipeline          DESIGN §8    async broker vs synchronous serving loop
+    streaming         DESIGN §10   incremental re-ingest + chunked first-chunk latency
     roofline          §Roofline    aggregates dry-run JSONs (if present)
 """
 
@@ -24,7 +25,7 @@ import time
 
 from . import (bench_combine, bench_compression, bench_encode, bench_engine,
                bench_partition_sweep, bench_pipeline, bench_roofline,
-               bench_throughput)
+               bench_streaming, bench_throughput)
 
 SUITES = {
     "compression": bench_compression.run,
@@ -34,6 +35,7 @@ SUITES = {
     "engine": bench_engine.run,
     "encode": bench_encode.run,
     "pipeline": bench_pipeline.run,
+    "streaming": bench_streaming.run,
     "roofline": bench_roofline.run,
 }
 

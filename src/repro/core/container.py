@@ -27,6 +27,7 @@ from .recoil import RecoilPlan
 
 MAGIC = b"RCL1"
 KIND_SINGLE, KIND_CONV, KIND_RECOIL = 0, 1, 2
+KIND_RECOIL_CHUNKED = 3
 
 
 def _pack_table(model: StaticModel) -> bytes:
@@ -92,6 +93,68 @@ def pack_recoil(enc: EncodedStream, model: StaticModel, plan: RecoilPlan) -> byt
             + enc.stream.astype("<u2").tobytes())
 
 
+def pack_recoil_chunked(enc: EncodedStream, model: StaticModel,
+                        plan: RecoilPlan, n_chunks: int) -> bytes:
+    """KIND_RECOIL_CHUNKED: the RECOIL payload plus a chunk directory for
+    streaming decode (DESIGN.md §10).
+
+    The stream bytes are IDENTICAL to ``pack_recoil``'s — chunking adds a
+    directory of cumulative prefixes, never reorders the payload.  Chunk
+    boundaries partition the plan's split rows (``engine.plan.chunk_bounds``
+    — the same partition the serving plans use); per chunk ``c`` the
+    directory carries
+
+        sym_end[c]    — symbols decoded once chunks ``<= c`` complete,
+        words_end[c]  — the stream-word prefix chunk ``c``'s rows read
+                        (monotone: each chunk is decodable as soon as its
+                        prefix has arrived — time-to-first-symbol is
+                        O(chunk), not O(asset)),
+        split_end[c]  — split rows consumed, so a receiver reconstructs
+                        each chunk's WalkBatch from the one plan blob.
+
+    Layout: RECOIL head (kind=3) + table + finals + plan blob +
+    ``<I`` chunk count + ``<III`` per chunk + stream words.
+    """
+    from .engine.plan import chunk_bounds
+    n_rows = plan.n_threads
+    bounds = chunk_bounds(n_rows, n_chunks)
+    comps = [p.completion for p in plan.points] + [plan.n_symbols]
+    q0s = [p.offset for p in plan.points] + [plan.n_words - 1]
+    directory = struct.pack("<I", len(bounds))
+    for r0, r1 in bounds:
+        sym_end = comps[r1 - 1]
+        words_end = max(q0s[r0:r1]) + 1
+        directory += struct.pack("<III", sym_end, words_end, r1)
+    head = MAGIC + struct.pack("<BBHQQ", KIND_RECOIL_CHUNKED,
+                               model.params.n_bits, model.params.ways,
+                               enc.n_symbols, enc.n_words)
+    blob = md.serialize_plan(plan)
+    return (head + _pack_table(model)
+            + enc.final_states.astype("<u4").tobytes()
+            + struct.pack("<I", len(blob)) + blob
+            + directory
+            + enc.stream.astype("<u2").tobytes())
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkDirectory:
+    """Cumulative per-chunk prefixes of a KIND_RECOIL_CHUNKED container."""
+
+    sym_end: np.ndarray     # int64[C]
+    words_end: np.ndarray   # int64[C]
+    split_end: np.ndarray   # int64[C]
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.sym_end)
+
+    def ready(self, words_arrived: int) -> int:
+        """How many leading chunks are decodable given an arrived stream
+        prefix of ``words_arrived`` words (the streaming-receiver test)."""
+        return int(np.searchsorted(self.words_end, words_arrived,
+                                   side="right"))
+
+
 def pack_conventional(conv: ConventionalEncoded, model: StaticModel) -> bytes:
     p0 = conv.partitions[0].params
     head = MAGIC + struct.pack("<BBHQQ", KIND_CONV, model.params.n_bits,
@@ -136,6 +199,7 @@ class ParsedContainer:
     conv_n_syms: np.ndarray | None = None
     conv_finals: np.ndarray | None = None     # (P, W) u32
     conv_streams: list | None = None
+    chunks: ChunkDirectory | None = None      # recoil-chunked
 
 
 def parse(buf: bytes, params: RansParams) -> ParsedContainer:
@@ -146,19 +210,29 @@ def parse(buf: bytes, params: RansParams) -> ParsedContainer:
     if n_bits != params.n_bits or ways != params.ways:
         raise ValueError("container/params mismatch")
     model, off = _unpack_table(buf, off, params)
-    if kind in (KIND_SINGLE, KIND_RECOIL):
+    if kind in (KIND_SINGLE, KIND_RECOIL, KIND_RECOIL_CHUNKED):
         n_symbols, n_words = a, b
         finals = np.frombuffer(buf, "<u4", ways, off).copy()
         off += ways * 4
         plan = None
-        if kind == KIND_RECOIL:
+        chunks = None
+        if kind in (KIND_RECOIL, KIND_RECOIL_CHUNKED):
             (ln,) = struct.unpack_from("<I", buf, off)
             off += 4
             plan = md.deserialize_plan(buf[off:off + ln])
             off += ln
+        if kind == KIND_RECOIL_CHUNKED:
+            (n_chunks,) = struct.unpack_from("<I", buf, off)
+            off += 4
+            d = np.frombuffer(buf, "<u4", 3 * n_chunks, off).reshape(-1, 3)
+            off += 12 * n_chunks
+            chunks = ChunkDirectory(sym_end=d[:, 0].astype(np.int64),
+                                    words_end=d[:, 1].astype(np.int64),
+                                    split_end=d[:, 2].astype(np.int64))
         stream = np.frombuffer(buf, "<u2", n_words, off).copy()
         return ParsedContainer(kind=kind, model=model, n_symbols=n_symbols,
-                               stream=stream, final_states=finals, plan=plan)
+                               stream=stream, final_states=finals, plan=plan,
+                               chunks=chunks)
     n_symbols, P = a, b
     dirty = np.frombuffer(buf, "<u4", 2 * P, off).reshape(P, 2)
     off += 8 * P

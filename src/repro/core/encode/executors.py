@@ -124,6 +124,55 @@ class JnpEncodeExecutor(EncodeExecutor):
                           n_symbols=N, n_splits=n_splits,
                           words_bucket=fast_b, words_bucket_full=full_b)
 
+    def plan_extend(self, delta: np.ndarray, n_splits: int, head: int,
+                    x0: np.ndarray,
+                    ctx: np.ndarray | None = None) -> EncodePlan:
+        """Suffix re-ingest plan: resume the state chain from ``x0`` and
+        encode only the appended ``delta``.
+
+        The suffix grid opens with ``head = N_old % W`` inert lead slots so
+        each lane's phase matches its absolute position in the grown
+        content — lane ``j``'s suffix chain then continues exactly where
+        the registered content's chain stopped, and every suffix emission's
+        (group, lane) coordinate is the absolute coordinate minus the
+        ``(N_old // W) * W`` grid origin (the splice rebase).  ``head`` and
+        ``x0`` are array contents, not shapes, so one extend executable per
+        (delta bucket, splits bucket) serves every asset size and phase.
+        """
+        W = self.ways
+        d = int(np.asarray(delta).size)
+        if not 0 <= head < W:
+            raise ValueError(f"head must be in [0, {W}), got {head}")
+        L = head + d                       # local flat symbol span
+        g_b = work_bucket(-(-L // W) if L else 0, 1)
+        fast_b, full_b = stream_capacity_buckets(d)   # <= 1 word per symbol
+        splits_b = splits_slot_bucket(n_splits)
+        pad = g_b * W - L
+        syms = np.asarray(delta, dtype=np.int32).ravel()
+        sym_gw = np.concatenate([np.zeros(head, np.int32), syms,
+                                 np.zeros(pad, np.int32)]).reshape(g_b, W)
+        active = np.concatenate([np.zeros(head, bool), np.ones(d, bool),
+                                 np.zeros(pad, bool)]).reshape(g_b, W)
+        if self.adaptive:
+            if ctx is None or len(np.asarray(ctx)) != d:
+                raise ValueError(
+                    "adaptive extend needs a per-symbol ctx map covering "
+                    f"all {d} delta symbols")
+            ctx_gw = np.concatenate([np.zeros(head, np.int32),
+                                     np.asarray(ctx, np.int32),
+                                     np.zeros(pad, np.int32)]).reshape(g_b, W)
+        else:
+            ctx_gw = None
+        key = (self.impl, "extend", self.adaptive, self.n_bits, self.ways,
+               g_b, splits_b, self.window)
+        args = (jnp.asarray(sym_gw), jnp.asarray(active), self.f_tab,
+                self.F_tab, jnp.int32(L), jnp.int32(n_splits),
+                None if ctx_gw is None else jnp.asarray(ctx_gw),
+                jnp.asarray(np.asarray(x0, np.uint32)))
+        return EncodePlan(key=key, args=args, statics=self._statics(splits_b),
+                          n_symbols=L, n_splits=n_splits,
+                          words_bucket=fast_b, words_bucket_full=full_b)
+
     def plan_batch(self, contents: Sequence[np.ndarray], n_splits,
                    ctxs: Sequence[np.ndarray] | None = None) -> EncodePlan:
         """One plan for B contents: shared buckets sized to the largest

@@ -77,7 +77,7 @@ _I32_MAX = np.int32(np.iinfo(np.int32).max)
 
 def encode_scan(sym_gw: jax.Array, active_gw: jax.Array, f_tab: jax.Array,
                 F_tab: jax.Array, n_bits: int, ways: int, ctx_gw=None,
-                unroll: int = 1):
+                unroll: int = 1, x0=None):
     """Group-stepped W-lane interleaved rANS encode (paper Eq. 1+3).
 
     Returns ``((final u32[W], zero_freq bool), (words u16[G, W],
@@ -87,11 +87,21 @@ def encode_scan(sym_gw: jax.Array, active_gw: jax.Array, f_tab: jax.Array,
     active symbol has zero quantized frequency — the oracle raises; the
     scan would silently corrupt the stream, so callers must check it.
     Pure jnp; jit/vmap at the call site.
+
+    ``x0`` resumes the per-lane state chain (incremental re-ingest): each
+    lane's chain depends only on that lane's own symbol sequence, so
+    seeding with a previous encode's ``final_states`` and feeding only the
+    appended suffix reproduces the full re-encode's suffix emissions
+    bit-exactly (DESIGN.md §10).  ``None`` keeps the cold-start constant
+    ``L = 2**16`` so existing executables and golden vectors are untouched.
     """
     shift = np.uint32(32 - n_bits)
     b_bits = np.uint32(16)
     word_mask = np.uint32(0xFFFF)
-    x0 = jnp.full((ways,), np.uint32(1 << 16), dtype=jnp.uint32)
+    if x0 is None:
+        x0 = jnp.full((ways,), np.uint32(1 << 16), dtype=jnp.uint32)
+    else:
+        x0 = jnp.asarray(x0, dtype=jnp.uint32)
 
     def step(carry, inp):
         x, bad = carry
@@ -309,18 +319,24 @@ def plan_split_scan(k_of_word, ys, base, lr, masks, ccol_t, n_words,
 # ---------------------------------------------------------------------------
 
 def ingest_pipeline(sym_gw, active_gw, f_tab, F_tab, n_symbols, n_splits,
-                    ctx_gw=None, *, n_bits: int, ways: int, words_bucket: int,
-                    splits_bucket: int, window: int, expand_rounds: int):
+                    ctx_gw=None, x0=None, *, n_bits: int, ways: int,
+                    words_bucket: int, splits_bucket: int, window: int,
+                    expand_rounds: int):
     """symbols -> (stream, emission log, final states, split plan) on device.
 
     ``n_symbols``/``n_splits`` are traced int32 scalars so one bucketed
     executable serves every content size and split count within its bucket.
     Returns a dict of device arrays; only the metadata entries (split
     slots, final states, scalars, flags) need to visit the host.
+
+    ``x0`` (optional u32[W]) resumes the encoder state chain for suffix
+    re-ingest: the grid then holds only the appended delta (plus inactive
+    lead slots aligning lane phases), and the split scan runs in suffix
+    -local coordinates the session rebases onto the registered content.
     """
     (final, zero_freq), (words, masks, ys) = encode_scan(
         sym_gw, active_gw, f_tab, F_tab, n_bits, ways, ctx_gw=ctx_gw,
-        unroll=SCAN_UNROLL)
+        unroll=SCAN_UNROLL, x0=x0)
     gc, base, bits, lr, ccol_t, n_words = emission_layout(masks)
     stream, k_of_word, y_of_word, overflow = compact_emissions(
         words, ys, gc, base, bits, lr, masks, n_words, ways, words_bucket)

@@ -33,11 +33,14 @@ request-local data and need no lock.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from ..engine.plan import DeviceStream
+from ..engine.plan import DeviceStream, pow2_bucket
 from ..interleaved import EncodedStream
 from ..recoil import RecoilPlan, SplitPoint
 from .executors import make_encode_executor
@@ -54,9 +57,61 @@ class EncodeStats:
     cache_hits: int = 0    # ingests served by an existing executable
     encodes: int = 0       # pipeline dispatches (batch counts as one)
     fallbacks: int = 0     # full-tier re-runs (round-0 miss / overflow)
+    extends: int = 0       # incremental re-ingests (suffix-only encodes)
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Splice kernels (incremental re-ingest, DESIGN.md §10).  Gather + select
+# only; shapes are the static residency buckets and every size-dependent
+# quantity is a traced scalar, so warm extends with stable buckets re-run
+# existing traces — jax.jit's cache keys on (shapes, out_len) alone.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("out_len",))
+def _splice_words(old, suffix, old_n, total_n, out_len: int):
+    """Concatenate the suffix stream after the registered words: emission
+    (g, j) pairs of the suffix are lexicographically after every old pair,
+    so suffix offsets rebase by plain ``+ old_n`` (no interleaving)."""
+    q = jnp.arange(out_len, dtype=jnp.int32)
+    o = old[jnp.clip(q, 0, old.shape[0] - 1)].astype(jnp.uint32)
+    s = suffix[jnp.clip(q - old_n, 0, suffix.shape[0] - 1)]
+    return jnp.where(q >= total_n, jnp.uint32(0),
+                     jnp.where(q < old_n, o, s))
+
+
+@functools.partial(jax.jit, static_argnames=("out_len",))
+def _splice_by_symbol(old, suffix, n_old, n_total, origin, out_len: int):
+    """Splice the suffix grid's permutation entries after the registered
+    ones: suffix-local flat index ``l`` is absolute symbol ``origin + l``
+    (``origin = (N_old // W) * W``, the suffix grid's origin)."""
+    i = jnp.arange(out_len, dtype=jnp.int32)
+    o = old[jnp.clip(i, 0, old.shape[0] - 1)].astype(jnp.uint32)
+    s = suffix[jnp.clip(i - origin, 0, suffix.shape[0] - 1)]
+    return jnp.where(i >= n_total, jnp.uint32(0),
+                     jnp.where(i < n_old, o, s))
+
+
+def _permutation_dtype(n_words: int):
+    """u16 permutation variant: with fewer than 2**16 stream words every
+    entry fits a u16, halving symbol-layout residency for small assets.
+    The dtype joins the decode plan keys (`engine.executors`) so u16 and
+    u32 buckets never alias one executable."""
+    return jnp.uint16 if n_words < (1 << 16) else jnp.uint32
+
+
+@dataclasses.dataclass
+class _ResumeState:
+    """Per-name tail of the last ingest: everything ``extend`` resumes
+    from.  ``final_states`` seed the suffix encode; the device handles are
+    the registered content the splice appends to."""
+
+    n_symbols: int
+    final_states: np.ndarray     # uint32[W]
+    stream: DeviceStream
+    plan: RecoilPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,7 +143,6 @@ class EncoderSession:
 
     def __init__(self, model, *, impl: str = "jnp", window: int = 96,
                  fast_rounds: bool = True):
-        import jax.numpy as jnp
         self.model = model
         self.adaptive = np.asarray(model.f).ndim == 2
         self.params = model.params
@@ -101,6 +155,7 @@ class EncoderSession:
         self.fast_rounds = fast_rounds
         self._exec: dict[tuple, object] = {}
         self._lock = threading.Lock()   # guards _exec + stats (see header)
+        self._resume: dict[str, _ResumeState] = {}   # guarded by _lock
         self.stats = EncodeStats()
 
     # ------------------------------------------------------------------
@@ -164,15 +219,140 @@ class EncoderSession:
     # Ingest (device-resident) / encode (host materialization)
     # ------------------------------------------------------------------
 
-    def ingest(self, symbols, n_splits: int, ctx=None) -> IngestResult:
+    def ingest(self, symbols, n_splits: int, ctx=None,
+               name: str | None = None) -> IngestResult:
         """symbols -> (device stream, validated RecoilPlan, final states).
 
         The stream never visits the host; the returned handle plugs into
-        ``DecodeService.register`` / any jnp-family decode executor."""
+        ``DecodeService.register`` / any jnp-family decode executor.
+        Passing ``name`` records the resumable tail (final states + device
+        handles) so later :meth:`extend` calls can re-ingest only a delta.
+        """
         plan = self.prepare(symbols, n_splits, ctx)
         out, cap = self.execute(plan)
-        return self._materialize(out, plan, plan.n_symbols, cap,
-                                 symbols=symbols)
+        res = self._materialize(out, plan, plan.n_symbols, cap,
+                                symbols=symbols)
+        if name is not None:
+            self._remember(name, res)
+        return res
+
+    def _remember(self, name: str, res: IngestResult) -> None:
+        with self._lock:
+            self._resume[name] = _ResumeState(
+                n_symbols=res.plan.n_symbols,
+                final_states=np.asarray(res.final_states),
+                stream=res.stream, plan=res.plan)
+
+    def can_extend(self, name: str) -> bool:
+        with self._lock:
+            return name in self._resume
+
+    def forget(self, name: str) -> None:
+        """Drop the resumable tail (callers fall back to full re-ingest)."""
+        with self._lock:
+            self._resume.pop(name, None)
+
+    def extend(self, name: str, delta, ctx=None) -> IngestResult:
+        """Incremental re-ingest: append ``delta`` to the content last
+        ingested (or extended) under ``name``, encoding ONLY the suffix.
+
+        Resumes the per-lane rANS chains from the cached ``final_states``
+        (each lane's chain depends only on its own symbols, so the suffix
+        emissions are bit-exact vs a full re-encode of the grown content),
+        then splices stream words, split points, and permutation entries
+        onto the registered device arrays — cost proportional to the
+        delta, not the asset.  Raises ``KeyError`` when ``name`` has no
+        resumable tail; the caller's fallback is a full re-ingest
+        (DESIGN.md §10).
+        """
+        with self._lock:
+            state = self._resume.get(name)
+        if state is None:
+            raise KeyError(
+                f"no resumable ingest state for {name!r}; fall back to a "
+                "full ingest (pass name= to ingest to record the tail)")
+        d = int(np.asarray(delta).size)
+        if d == 0:
+            raise ValueError("extend needs a non-empty delta")
+        self._check_symbols(delta)
+        N0 = state.n_symbols
+        if N0 + d >= MAX_SYMBOLS:
+            raise ValueError(
+                f"extended content ({N0} + {d} symbols) exceeds the int32 "
+                f"device planning range (< {MAX_SYMBOLS})")
+        W = self.params.ways
+        head = N0 % W
+        # Keep split density: the registered plan placed M0 points over N0
+        # symbols, so the suffix gets ~M0 * d / N0 new ones (>= 0).
+        m0 = state.plan.n_threads - 1
+        n_splits = 1 + (-(-m0 * d // N0) if N0 else m0)
+        plan = self.executor.plan_extend(
+            delta, n_splits, head, state.final_states,
+            self._ctx_for_extend(d, N0, ctx))
+        out, cap = self.execute(plan)
+        with self._lock:
+            self.stats.extends += 1
+        res = self._materialize_extend(out, state, delta)
+        self._remember(name, res)
+        return res
+
+    def _ctx_for_extend(self, d: int, n0: int, ctx):
+        if not self.adaptive:
+            if ctx is not None:
+                raise ValueError("ctx map given but the model is static")
+            return None
+        if ctx is not None:
+            return ctx
+        model_ctx = getattr(self.model, "ctx", None)
+        if model_ctx is not None and len(model_ctx) >= n0 + d:
+            return np.asarray(model_ctx)[n0:n0 + d]
+        raise ValueError(
+            f"adaptive extend of {d} symbols at offset {n0} needs a ctx "
+            f"map (model.ctx covers "
+            f"{0 if model_ctx is None else len(model_ctx)})")
+
+    def _materialize_extend(self, out, state: _ResumeState,
+                            delta) -> IngestResult:
+        """Splice the suffix pipeline's outputs onto the registered
+        content (DESIGN.md §10 invariants: suffix emissions strictly
+        follow old ones in (g, j) order; suffix split coordinates rebase
+        by the grid origin / old word count; old split points stay valid
+        because every new completion exceeds N_old)."""
+        self._check_flags(out, delta)
+        W = self.params.ways
+        N0 = state.n_symbols
+        d = int(np.asarray(delta).size)
+        n_total = N0 + d
+        origin = (N0 // W) * W            # suffix grid's absolute origin
+        old_n = state.stream.n_words
+        suffix_n = int(out["n_words"])
+        n_words = old_n + suffix_n
+
+        found = np.asarray(out["split_found"])
+        q = np.asarray(out["split_q"])
+        k = np.asarray(out["split_k"]).astype(np.int64)
+        y = np.asarray(out["split_y"]).astype(np.uint32)
+        new_points = tuple(
+            SplitPoint(offset=int(q[m]) + old_n, k=k[m] + origin, y=y[m])
+            for m in np.flatnonzero(found))
+        rplan = RecoilPlan(points=state.plan.points + new_points,
+                           n_symbols=n_total, n_words=n_words, ways=W)
+        rplan.validate(self.params.lower_bound)
+
+        bucket = pow2_bucket(n_words, 1024)
+        words = _splice_words(state.stream.words, out["stream"],
+                              jnp.int32(old_n), jnp.int32(n_words),
+                              out_len=bucket)
+        sym_bucket = pow2_bucket(n_total, 1024)
+        by = _splice_by_symbol(state.stream.by_symbol, out["by_symbol"],
+                               jnp.int32(N0), jnp.int32(n_total),
+                               jnp.int32(origin), out_len=sym_bucket)
+        by = by.astype(_permutation_dtype(n_words))
+        ds = DeviceStream(words=words, host=None, n_words=n_words,
+                          bucket=bucket, by_symbol=by, sym_bucket=sym_bucket)
+        return IngestResult(stream=ds, plan=rplan,
+                            final_states=np.asarray(out["final_states"]),
+                            n_words=n_words)
 
     def ingest_batch(self, contents, n_splits, ctxs=None) -> list[IngestResult]:
         """B contents through ONE vmapped dispatch; per-content results are
@@ -263,8 +443,6 @@ class EncoderSession:
         # streams get (pow2 of the real word count, floor 1024), so
         # ingested and registered copies of like-sized contents share
         # decode executables and the padding tail stays bounded.
-        from ..engine.plan import pow2_bucket
-        import jax.numpy as jnp
         bucket = min(words_bucket, pow2_bucket(n_words, 1024))
         # The symbol-indexed permutation rides along (same residency-bucket
         # discipline, floor 1024 so fused offsets stay group-aligned); the
@@ -277,6 +455,7 @@ class EncoderSession:
         else:
             by = jnp.concatenate(
                 [by, jnp.zeros(sym_bucket - by.shape[0], jnp.uint32)])
+        by = by.astype(_permutation_dtype(n_words))
         ds = DeviceStream(words=out["stream"][:bucket], host=None,
                           n_words=n_words, bucket=bucket,
                           by_symbol=by, sym_bucket=sym_bucket)

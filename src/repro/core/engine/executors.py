@@ -177,8 +177,11 @@ class JnpExecutor(Executor):
                        n_symbols=out_b)
         if layout == "symbol":
             _check_sym_alignment(batch, ds, W)
+            # The permutation dtype (u16 for small assets, u32 otherwise)
+            # joins the key: same sym_bucket, different dtype must not
+            # alias one executable.
             key = (self.impl, layout, self.packed_lut, p.n_bits, W, s_b,
-                   steps_b, ds.sym_bucket, out_b)
+                   steps_b, ds.sym_bucket, ds.by_symbol.dtype.name, out_b)
             args = (ds.by_symbol, *self.luts,
                     *(arrs[f] for f in SYMBOL_SPLIT_FIELDS))
         else:

@@ -72,14 +72,30 @@ class RecoilPlan:
         return len(self.points) + 1
 
     def validate(self, lower_bound: int = 1 << 16) -> None:
-        prev_off, prev_c = -1, 0
-        for pt in self.points:
-            pt.validate(self.ways, lower_bound)
-            if not (prev_off < pt.offset < self.n_words):
-                raise ValueError("split offsets must be strictly increasing")
-            if pt.completion <= prev_c:
-                raise ValueError("split completions must be strictly increasing")
-            prev_off, prev_c = pt.offset, pt.completion
+        # One vectorized pass over the stacked metadata, not a Python loop
+        # per point: validate runs on every registration AND on every
+        # incremental extend, so at serving rates its cost is part of the
+        # request path (it dominated the warm extend profile before).
+        if not self.points:
+            return
+        W = self.ways
+        if any(pt.k.shape != (W,) or pt.y.shape != (W,)
+               for pt in self.points):
+            raise ValueError("split point has wrong way count")
+        ks = np.stack([pt.k for pt in self.points])
+        ys = np.stack([pt.y for pt in self.points])
+        offs = np.fromiter((pt.offset for pt in self.points), np.int64,
+                           len(self.points))
+        if int(ys.max()) >= lower_bound:
+            raise ValueError("intermediate state exceeds Lemma 3.1 bound")
+        if np.any(ks % W != np.arange(W)):
+            raise ValueError("k[j] must be handled by way j (k % W == j)")
+        if not (offs[0] > -1 and offs[-1] < self.n_words
+                and np.all(offs[:-1] < offs[1:])):
+            raise ValueError("split offsets must be strictly increasing")
+        comps = ks.min(axis=1)
+        if not (comps[0] > 0 and np.all(comps[:-1] < comps[1:])):
+            raise ValueError("split completions must be strictly increasing")
 
 
 def plan_splits(enc: EncodedStream, n_splits: int, *, window: int = 96) -> RecoilPlan:

@@ -337,7 +337,9 @@ def _walk_one_split_symbol(by_groups: jax.Array, sym_lut: jax.Array,
     # sym_base is in symbol units and W-aligned by construction (checked at
     # plan/concat time), so the group-row shift is exact.
     rows = jnp.clip(g_hi + sym_base // W - tarr, 0, by_groups.shape[0] - 1)
-    words_t = jnp.take(by_groups, rows, axis=0)   # (T, W), out of the scan
+    # u16 permutation variant (small assets): upcast after the bulk gather
+    # so the decode math below is dtype-independent.
+    words_t = jnp.take(by_groups, rows, axis=0).astype(jnp.uint32)
 
     def step(x, inp):
         t, word = inp

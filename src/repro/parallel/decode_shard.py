@@ -149,7 +149,10 @@ class ShardedExecutor(JnpExecutor):
             # gathers symbol indices [stop + sym_base, start + sym_base],
             # so the shard slab is that union sliced from words_by_symbol
             # (rounded down to a whole W-group so group rows stay aligned).
-            # Replaces the pointer path's q0-read-window union.
+            # Replaces the pointer path's q0-read-window union.  Chunked
+            # decode (DESIGN.md §10) rides this for free: a ChunkSpec's
+            # rows keep absolute start/stop windows, so each chunk's slabs
+            # cover only that chunk's permutation slice.
             by_sym = self._replicated(ds, "by_symbol")
             sym_base = np.zeros(s_b, np.int64)
             sym_base[:S] = batch.sym_bases()
@@ -168,8 +171,11 @@ class ShardedExecutor(JnpExecutor):
                 self._slab_rows)
             arrs["sym_base"] = jnp.asarray(
                 (sym_base - np.repeat(lo_s, rows_per)).astype(np.int32))
+            # Permutation dtype joins the key (u16 small-asset variant):
+            # slabs inherit it, so u16/u32 must not alias one executable.
             key = (self.impl, layout, self.n_shards, self.axes,
-                   self.packed_lut, p.n_bits, W, s_b, steps_b, slab_b, out_b)
+                   self.packed_lut, p.n_bits, W, s_b, steps_b, slab_b,
+                   ds.by_symbol.dtype.name, out_b)
             args = (slabs, *self.luts,
                     *(jax.device_put(arrs[f], self._rows)
                       for f in SYMBOL_SPLIT_FIELDS))

@@ -46,7 +46,7 @@ from collections import deque
 import jax
 
 from repro.runtime.metrics import LatencyWindow, OverlapClock
-from repro.runtime.serve import DecodeTicket
+from repro.runtime.serve import DecodeTicket, StreamTicket
 
 from .capability import CapabilityRegistry
 from .controller import AdaptiveController, ControllerConfig
@@ -157,7 +157,8 @@ class PipelineBroker:
         self._cv = threading.Condition()
         self._lanes: dict[int, deque] = {}
         self._ingest_q: deque = deque()
-        self._queued = 0            # decode requests in lanes
+        self._stream_q: deque = deque()   # chunked streaming decode jobs
+        self._queued = 0            # decode + stream requests queued
         self._inflight = 0          # popped, not yet fulfilled (decode)
         self._ingest_inflight = 0
         self._closing = False
@@ -178,6 +179,8 @@ class PipelineBroker:
         self.ingest_events = 0
         self.ingest_dispatches = 0
         self.ingest_errors = 0
+        self.extend_events = 0
+        self.stream_dispatches = 0
 
         self._decode_thread = threading.Thread(
             target=self._decode_worker, name="recoil-decode", daemon=True)
@@ -224,6 +227,54 @@ class PipelineBroker:
                     f"ingest queue at bound {self.max_ingest_queue}")
             self._ingest_q.append((ticket, name, symbols, int(n_splits)))
             self.ingest_events += 1
+            self._cv.notify_all()
+        return ticket
+
+    def submit_extend(self, name: str, delta) -> PipelineTicket:
+        """Queue an incremental re-ingest (``DecodeService.extend``): the
+        ingest worker resumes the encoder's cached state chain and encodes
+        only the appended suffix.  Rides the ingest queue — FIFO per name,
+        so an extend can never be applied before the ingest (or earlier
+        extend) it grows; the ticket resolves to the grown RecoilPlan.
+        Extends always dispatch singly (never inside a vmapped
+        ``ingest_batch`` — suffix shapes are per-content)."""
+        ticket = PipelineTicket(self.svc, kind="extend")
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("broker is closed")
+            if len(self._ingest_q) + self._ingest_inflight \
+                    >= self.max_ingest_queue:
+                self.rejected += 1
+                raise BrokerSaturated(
+                    f"ingest queue at bound {self.max_ingest_queue}")
+            self._ingest_q.append((ticket, name, delta, 0))
+            self.ingest_events += 1
+            self.extend_events += 1
+            self._cv.notify_all()
+        return ticket
+
+    def submit_stream(self, name: str, n_threads: int,
+                      n_chunks: int = 8) -> StreamTicket:
+        """Queue a chunked streaming decode; the decode worker dispatches
+        the chunk executables (streams preempt lane grouping — they are the
+        latency-sensitive path).  Returns the service's
+        :class:`~repro.runtime.serve.StreamTicket` — per-chunk results
+        arrive as the worker dispatches them."""
+        if self.svc.generation(name) == 0:
+            raise KeyError(f"content {name!r} is not registered")
+        ticket = StreamTicket(
+            self.svc.stream_chunk_count(name, n_threads, n_chunks))
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("broker is closed")
+            if self._queued + self._inflight >= self.max_queue:
+                self.rejected += 1
+                raise BrokerSaturated(
+                    f"decode queue at bound {self.max_queue}")
+            self._stream_q.append((ticket, name, int(n_threads),
+                                   int(n_chunks)))
+            self._queued += 1
+            self.submitted += 1
             self._cv.notify_all()
         return ticket
 
@@ -312,29 +363,60 @@ class PipelineBroker:
     def _decode_worker(self) -> None:
         while True:
             with self._cv:
-                now = time.perf_counter()
-                lane, take, min_wait = self._pick_lane(now)
-                if lane is None:
-                    if self._closing:
-                        if self._queued == 0:
-                            break
-                        # closing with partial lanes: flush them now
-                        lane = max((l for l, q in self._lanes.items() if q),
-                                   key=lambda l: len(self._lanes[l]))
-                        take = min(len(self._lanes[lane]),
-                                   self.controller.cfg.max_batch)
-                    else:
-                        self._cv.wait(timeout=None if min_wait is None
-                                      else max(min_wait, 1.0) * 1e-3)
-                        continue
-                q = self._lanes[lane]
-                popped = [q.popleft() for _ in range(min(take, len(q)))]
-                self._queued -= len(popped)
-                self._inflight += len(popped)
+                # Streams preempt lane grouping: a stream request wants its
+                # first chunk NOW — it never waits behind a lane's adaptive
+                # accumulation window (chunks are single-request plans, so
+                # there is nothing to coalesce anyway).
+                job = None
+                if self._stream_q:
+                    job = self._stream_q.popleft()
+                    self._queued -= 1
+                    self._inflight += 1
+                else:
+                    now = time.perf_counter()
+                    lane, take, min_wait = self._pick_lane(now)
+                    if lane is None:
+                        if self._closing:
+                            if self._queued == 0:
+                                break
+                            # closing with partial lanes: flush them now
+                            lane = max(
+                                (l for l, q in self._lanes.items() if q),
+                                key=lambda l: len(self._lanes[l]))
+                            take = min(len(self._lanes[lane]),
+                                       self.controller.cfg.max_batch)
+                        else:
+                            self._cv.wait(timeout=None if min_wait is None
+                                          else max(min_wait, 1.0) * 1e-3)
+                            continue
+                    q = self._lanes[lane]
+                    popped = [q.popleft() for _ in range(min(take, len(q)))]
+                    self._queued -= len(popped)
+                    self._inflight += len(popped)
+            if job is not None:
+                self._dispatch_stream(job)
+                with self._cv:
+                    self._inflight -= 1
+                    self._cv.notify_all()
+                continue
             self._dispatch(lane, popped)
             with self._cv:
                 self._inflight -= len(popped)
                 self._cv.notify_all()
+
+    def _dispatch_stream(self, job) -> None:
+        ticket, name, n_threads, n_chunks = job
+        t0 = self.clock.begin("decode")
+        self.wait_window.record(t0 - ticket.submitted_at)
+        try:
+            self.svc.dispatch_stream(name, n_threads, n_chunks, ticket)
+            jax.block_until_ready(ticket.chunk(ticket.n_chunks - 1))
+        except Exception:
+            self.dispatch_errors += 1   # the ticket already carries the error
+        t1 = self.clock.end("decode")
+        self.service_window.record(t1 - t0)
+        self.stream_dispatches += 1
+        self.completed += 1
 
     def _dispatch(self, lane: int, popped: list) -> None:
         # Cancelled tickets are dropped HERE — at dispatch-group build time
@@ -375,14 +457,22 @@ class PipelineBroker:
         """Under ``_cv``: a queue prefix of events with DISTINCT names (a
         repeated name must stay ordered across batches so a later refresh
         cannot be registered before an earlier one), bounded by the
-        coalescing width."""
+        coalescing width.  Extend events never share a batch with ingests
+        (or other extends): the suffix encode resumes per-content state, so
+        there is nothing to vmap — each extend dispatches singly, still
+        FIFO-ordered against the ingests of its name."""
         batch, names = [], set()
         while self._ingest_q and len(batch) < self.ingest_coalesce:
-            if self._ingest_q[0][1] in names:
+            head = self._ingest_q[0]
+            if head[1] in names:
+                break
+            if batch and head[0].kind == "extend":
                 break
             ev = self._ingest_q.popleft()
             names.add(ev[1])
             batch.append(ev)
+            if ev[0].kind == "extend":
+                break
         return batch
 
     def _ingest_worker(self) -> None:
@@ -404,7 +494,10 @@ class PipelineBroker:
             try:
                 if len(live) == 1:
                     ticket, name, symbols, n_splits = live[0]
-                    plan = self.svc.ingest(name, symbols, n_splits)
+                    if ticket.kind == "extend":
+                        plan = self.svc.extend(name, symbols)
+                    else:
+                        plan = self.svc.ingest(name, symbols, n_splits)
                     ticket._fulfill(out=plan)
                 elif live:
                     contents = {name: symbols
@@ -456,6 +549,8 @@ class PipelineBroker:
             "ingest_events": self.ingest_events,
             "ingest_dispatches": self.ingest_dispatches,
             "ingest_errors": self.ingest_errors,
+            "extend_events": self.extend_events,
+            "stream_dispatches": self.stream_dispatches,
             "wait": self.wait_window.summary_ms(),
             "service": self.service_window.summary_ms(),
             "ingest_service": self.ingest_window.summary_ms(),

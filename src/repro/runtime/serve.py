@@ -57,7 +57,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.encode import EncoderSession
-from repro.core.engine import (DecodePlan, DecoderSession, DeviceStream,
+from repro.core.engine import (ChunkSpec, DecodePlan, DecoderSession,
+                               DeviceStream, chunk_walk_batch,
                                concat_walk_batches, pow2_bucket,
                                with_symbol_layout)
 from repro.core.rans import StaticModel
@@ -136,6 +137,8 @@ class ServiceStats:
     fused_dispatches: int
     flushes: int
     ingests: int = 0           # contents registered through the encode engine
+    extends: int = 0           # incremental re-ingests (suffix-only encodes)
+    stream_requests: int = 0   # chunked streaming decodes (submit_stream)
     encode_compiles: int = 0   # ingest-engine executable builds
     encode_fallbacks: int = 0  # full-rounds heuristic re-runs
     host_materializations: int = 0  # lazy device->host stream copies (pallas)
@@ -176,6 +179,66 @@ class DecodeTicket:
         return self.out
 
 
+class StreamTicket:
+    """Handle for a chunked streaming decode (DESIGN.md §10).
+
+    The asset's thinned split rows are partitioned into ``n_chunks``
+    completion-ordered chunks (``engine.plan.chunk_walk_batch``); each chunk
+    is its own (bucketed, cached) executable dispatch, so the first symbols
+    are ready after ~1/n_chunks of the asset's decode work instead of all of
+    it.  ``chunk(i)`` blocks until chunk ``i`` has been dispatched and
+    returns its device symbol array (symbols ``base..base+length`` of the
+    asset); iterating the ticket yields the chunks in order.  ``result()``
+    concatenates them back into the whole asset.  Timing hooks
+    (``submitted_at``/``first_chunk_at``/``completed_at``) feed the
+    streaming benchmark's time-to-first-chunk measurement.
+    """
+
+    __slots__ = ("n_chunks", "specs", "err", "submitted_at",
+                 "first_chunk_at", "completed_at", "_chunks", "_events")
+
+    def __init__(self, n_chunks: int):
+        self.n_chunks = n_chunks
+        self.specs: list[ChunkSpec] | None = None   # set at dispatch time
+        self.err: Exception | None = None
+        self.submitted_at = time.perf_counter()
+        self.first_chunk_at: float | None = None
+        self.completed_at: float | None = None
+        self._chunks = [None] * n_chunks
+        self._events = [threading.Event() for _ in range(n_chunks)]
+
+    def _fulfill_chunk(self, i: int, out) -> None:
+        self._chunks[i] = out
+        now = time.perf_counter()
+        if i == 0:
+            self.first_chunk_at = now
+        if i == self.n_chunks - 1:
+            self.completed_at = now
+        self._events[i].set()
+
+    def _fail(self, err: Exception) -> None:
+        self.err = err
+        for ev in self._events:
+            ev.set()
+
+    def chunk(self, i: int, timeout: float | None = None) -> jax.Array:
+        """Device int32 symbols of chunk ``i`` (dispatched, possibly still
+        executing — ``jax.block_until_ready`` to pin arrival time)."""
+        if not self._events[i].wait(timeout):
+            raise TimeoutError(f"chunk {i} not dispatched within {timeout}s")
+        if self.err is not None:
+            raise self.err
+        return self._chunks[i]
+
+    def __iter__(self):
+        for i in range(self.n_chunks):
+            yield self.chunk(i)
+
+    def result(self) -> jax.Array:
+        parts = list(self)
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
 class DecodeService:
     """Serve Recoil-encoded content to clients of any parallel capacity.
 
@@ -207,6 +270,11 @@ class DecodeService:
         # thinned WalkBatch (fusable) and the full DecodePlan (single path).
         self._batches: dict[tuple, tuple[WalkBatch, int]] = {}
         self._plans: dict[tuple, DecodePlan] = {}
+        # (name, n_threads, n_chunks) -> [(DecodePlan, ChunkSpec), ...]:
+        # the chunk axis of the streaming path.  Each chunk's plan hits the
+        # same bucketed executable cache as whole-asset requests, so a warm
+        # stream is n_chunks cached dispatches with zero host prep.
+        self._chunk_plans: dict[tuple, list] = {}
         # Fused-dispatch memo: a request GROUP that recurs (hot working set
         # under steady traffic) reuses its fused DecodePlan + slice offsets,
         # so a warm flush is one cached executable call, zero host prep.
@@ -219,6 +287,8 @@ class DecodeService:
         self._fused = 0
         self._flushes = 0
         self._ingests = 0
+        self._extends = 0
+        self._streams = 0
         # Service lock (DESIGN.md §8): guards content/memos/pending/counters.
         # Reentrant because register() flushes stale pending requests while
         # already holding it.  Heavy work never runs under it — encode and
@@ -264,7 +334,8 @@ class DecodeService:
                 stream=stream, plan=plan,
                 final_states=np.asarray(final_states, np.uint32))
             self._generations[name] = self._generations.get(name, 0) + 1
-            for cache in (self._batches, self._plans):   # re-registration
+            for cache in (self._batches, self._plans,    # re-registration
+                          self._chunk_plans):
                 for key in [k for k in cache if k[0] == name]:
                     del cache[key]
             self._fused_plans.clear()
@@ -303,11 +374,35 @@ class DecodeService:
         executor's ``host_materializations`` counts the copies exactly.)
         Returns the registered :class:`RecoilPlan` (e.g. for clients that
         want to know the supported parallelism)."""
-        res = self._encode_session().ingest(symbols, n_splits)
+        res = self._encode_session().ingest(symbols, n_splits, name=name)
         self.register(name, res.plan, res.stream, res.final_states)
         with self._lock:
             self._ingests += 1
         return res.plan
+
+    def extend(self, name: str, delta: np.ndarray) -> RecoilPlan:
+        """Incrementally re-ingest: append ``delta`` symbols to an ingested
+        content and re-register the grown asset.  The encoder resumes the
+        rANS state chain from the cached final states, so only the suffix is
+        encoded (cost proportional to ``len(delta)``, not the asset) and the
+        spliced stream is bit-exact with a full re-encode (DESIGN.md §10).
+        Re-registration bumps the content generation, so capability-registry
+        memos and this service's plan memos invalidate exactly as they would
+        for any other content swap.  Raises ``KeyError`` when ``name`` was
+        never ingested through this service (host-registered content has no
+        resumable encoder state — fall back to a full :meth:`ingest`)."""
+        res = self._encode_session().extend(name, delta)
+        self.register(name, res.plan, res.stream, res.final_states)
+        with self._lock:
+            self._extends += 1
+        return res.plan
+
+    def can_extend(self, name: str) -> bool:
+        """Whether :meth:`extend` would succeed for ``name`` (i.e. the
+        encoder holds resumable state from a prior :meth:`ingest`)."""
+        with self._lock:
+            enc = self._encoder
+        return enc is not None and enc.can_extend(name)
 
     def ingest_batch(self, contents: dict, n_splits: int) -> dict:
         """Ingest many contents through ONE vmapped encode dispatch:
@@ -368,6 +463,91 @@ class DecodeService:
             else:
                 self._plan_hits += 1
         return self.session.execute(plan)
+
+    # ------------------------------------------------------------------
+    # Chunked streaming path (DESIGN.md §10)
+    # ------------------------------------------------------------------
+
+    def _chunked_plans(self, name: str, n_threads: int,
+                       n_chunks: int) -> list:
+        """Memoized per-chunk plans (caller holds ``_lock``): the request's
+        thinned rows partitioned completion-ordered into chunks
+        (``chunk_walk_batch``), each prepared as its own bucketed
+        :class:`DecodePlan` against the SAME resident stream — chunk ``k``
+        only reads the stream-word prefix ``specs[k].words_end``, which is
+        what makes decode-while-arriving sound."""
+        key = (name, n_threads, int(n_chunks))
+        hit = self._chunk_plans.get(key)
+        if hit is not None:
+            self._plan_hits += 1
+            return hit
+        batch, n = self._thinned_batch(name, n_threads)
+        stream = self._contents[name].stream
+        specs = chunk_walk_batch(batch, n, n_chunks)
+        plans = [(self.session.prepare(s.batch, stream, s.length), s)
+                 for s in specs]
+        self._chunk_plans[key] = plans
+        return plans
+
+    def stream_chunk_count(self, name: str, n_threads: int,
+                           n_chunks: int) -> int:
+        """The chunk count a stream request will actually yield
+        (``n_chunks`` clamped to the request's split-row count — a chunk
+        must hold at least one split row)."""
+        with self._lock:
+            rows = min(int(n_threads), self._contents[name].plan.n_threads)
+        return max(1, min(int(n_chunks), rows))
+
+    def decode_chunks(self, name: str, n_threads: int,
+                      n_chunks: int) -> list[jax.Array]:
+        """Decode registered content as ``n_chunks`` pipelined dispatches;
+        returns the per-chunk device symbol arrays in asset order.  Each
+        dispatch is asynchronous (XLA enqueues), so chunk 0 is ready after
+        ~1/n_chunks of the asset's decode work while later chunks are still
+        executing — concatenating the parts equals :meth:`decode` exactly."""
+        with self._lock:
+            self._streams += 1
+            plans = self._chunked_plans(name, n_threads, n_chunks)
+        return [self.session.execute(p) for p, _ in plans]
+
+    def submit_stream(self, name: str, n_threads: int,
+                      n_chunks: int = 8) -> StreamTicket:
+        """Chunked streaming decode returning a :class:`StreamTicket` that
+        yields per-chunk results as they complete.  With a pipeline broker
+        attached the dispatch runs on the broker's worker thread (overlapped
+        with ingest traffic); otherwise the chunks are dispatched inline —
+        still pipelined, because each chunk's executable is enqueued
+        asynchronously."""
+        broker = self._broker
+        if broker is not None:
+            submit = getattr(broker, "submit_stream", None)
+            if submit is not None:
+                return submit(name, n_threads, n_chunks)
+        ticket = StreamTicket(self.stream_chunk_count(name, n_threads,
+                                                      n_chunks))
+        return self.dispatch_stream(name, n_threads, n_chunks, ticket)
+
+    def dispatch_stream(self, name: str, n_threads: int, n_chunks: int,
+                        ticket: StreamTicket) -> StreamTicket:
+        """Plan under the service lock, dispatch each chunk OUTSIDE it
+        (broker backend + sync path share this).  ``ticket.n_chunks`` must
+        equal :meth:`stream_chunk_count` for the request."""
+        try:
+            with self._lock:
+                self._streams += 1
+                plans = self._chunked_plans(name, n_threads, n_chunks)
+            if len(plans) != ticket.n_chunks:
+                raise ValueError(
+                    f"ticket expects {ticket.n_chunks} chunks but the plan "
+                    f"yields {len(plans)} — content re-registered with "
+                    f"fewer splits between submit and dispatch")
+            ticket.specs = [spec for _, spec in plans]
+            for i, (plan, _) in enumerate(plans):
+                ticket._fulfill_chunk(i, self.session.execute(plan))
+        except Exception as e:
+            ticket._fail(e)
+            raise
+        return ticket
 
     # ------------------------------------------------------------------
     # Microbatched path
@@ -560,6 +740,7 @@ class DecodeService:
                 coalesced_requests=self._coalesced,
                 fused_dispatches=self._fused,
                 flushes=self._flushes, ingests=self._ingests,
+                extends=self._extends, stream_requests=self._streams,
                 encode_compiles=enc.compiles if enc else 0,
                 encode_fallbacks=enc.fallbacks if enc else 0,
                 host_materializations=getattr(
@@ -630,7 +811,10 @@ def _fuse_permutations(streams: list[DeviceStream]) -> tuple:
     if any(ds.by_symbol is None for ds in streams):
         return None, 0, {id(ds): 0 for ds in streams}
     bucket = pow2_bucket(total, 1024)
-    parts = [ds.by_symbol for ds in streams]
+    # Small streams store the permutation as uint16 (DESIGN.md §10); the
+    # fused group's q0 offsets can exceed 2^16, so fusion upcasts every
+    # part to the common uint32 width.
+    parts = [ds.by_symbol.astype(jnp.uint32) for ds in streams]
     if bucket > total:
         parts.append(jnp.zeros(bucket - total, jnp.uint32))
     return jnp.concatenate(parts), bucket, perm_off

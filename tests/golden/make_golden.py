@@ -44,6 +44,14 @@ VECTORS = [
     ("static_w64_s4", 43, 1_500, 64, 12, 256, 4),
 ]
 
+# KIND_RECOIL_CHUNKED vectors (DESIGN.md §10).  The ``chunked_`` prefix
+# keeps them out of the KIND_RECOIL parametrization in test_golden.py —
+# they get their own directory-pinning + prefix-decodability tests.
+CHUNKED_VECTORS = [
+    # (name, seed, n_symbols, ways, n_bits, alphabet, n_splits, n_chunks)
+    ("chunked_w32_c4", 44, 2_400, 32, 11, 256, 12, 4),
+]
+
 
 def build(name, seed, n, ways, n_bits, alphabet, n_splits):
     rng = np.random.default_rng(seed)
@@ -71,6 +79,37 @@ def build(name, seed, n, ways, n_bits, alphabet, n_splits):
           f"{plan.n_threads} threads")
 
 
+def build_chunked(name, seed, n, ways, n_bits, alphabet, n_splits, n_chunks):
+    rng = np.random.default_rng(seed)
+    syms = np.concatenate([
+        np.minimum(rng.exponential(alphabet / 6.0,
+                                   size=n - alphabet).astype(np.int64),
+                   alphabet - 1),
+        np.arange(alphabet)])
+    rng.shuffle(syms)
+    model = StaticModel.from_symbols(syms, alphabet,
+                                     RansParams(n_bits=n_bits, ways=ways))
+    enc = encode_interleaved_fast(syms, model)
+    plan = recoil.plan_splits(enc, n_splits)
+    buf = container.pack_recoil_chunked(enc, model, plan, n_chunks)
+    parsed = container.parse(buf, model.params)
+    with open(os.path.join(HERE, f"{name}.bin"), "wb") as f:
+        f.write(buf)
+    np.savez_compressed(
+        os.path.join(HERE, f"{name}.npz"),
+        symbols=syms.astype(np.int64),
+        k_of_word=enc.k_of_word.astype(np.int64),
+        sym_end=parsed.chunks.sym_end,
+        words_end=parsed.chunks.words_end,
+        split_end=parsed.chunks.split_end,
+        n_bits=np.int64(n_bits), ways=np.int64(ways),
+        n_splits=np.int64(n_splits), n_chunks=np.int64(n_chunks))
+    print(f"{name}: {len(buf)} container bytes, {enc.n_words} words, "
+          f"{plan.n_threads} threads, {parsed.chunks.n_chunks} chunks")
+
+
 if __name__ == "__main__":
     for vec in VECTORS:
         build(*vec)
+    for vec in CHUNKED_VECTORS:
+        build_chunked(*vec)

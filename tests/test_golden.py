@@ -31,8 +31,12 @@ from repro.core.vectorized import (encode_interleaved_fast,
                                    words_by_symbol_host)
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
-NAMES = sorted(os.path.splitext(os.path.basename(p))[0]
-               for p in glob.glob(os.path.join(GOLDEN, "*.bin")))
+ALL_NAMES = sorted(os.path.splitext(os.path.basename(p))[0]
+                   for p in glob.glob(os.path.join(GOLDEN, "*.bin")))
+# KIND_RECOIL vectors vs KIND_RECOIL_CHUNKED vectors (chunked_ prefix):
+# the chunked ones carry a directory and get their own pinning tests.
+NAMES = [n for n in ALL_NAMES if not n.startswith("chunked_")]
+CHUNKED_NAMES = [n for n in ALL_NAMES if n.startswith("chunked_")]
 
 
 def _load(name):
@@ -45,6 +49,7 @@ def _load(name):
 
 def test_vectors_are_committed():
     assert len(NAMES) >= 3, f"golden vectors missing from {GOLDEN}"
+    assert len(CHUNKED_NAMES) >= 1, f"chunked golden vector missing"
 
 
 @pytest.mark.parametrize("name", NAMES)
@@ -116,3 +121,65 @@ def test_golden_symbol_layout_matches_frozen_permutation(name):
     assert (np.asarray(dev)[:n] == npz["by_symbol"]).all(), \
         "device derivation drifted"
     assert not np.asarray(dev)[n:].any()
+
+
+@pytest.mark.parametrize("name", CHUNKED_NAMES)
+def test_golden_chunked_directory_pinned(name):
+    """KIND_RECOIL_CHUNKED pinning: the frozen directory parses back to the
+    frozen (sym_end, words_end, split_end), and re-packing the committed
+    symbols reproduces the committed bytes exactly."""
+    buf, npz, params = _load(name)
+    parsed = container.parse(buf, params)
+    assert parsed.kind == container.KIND_RECOIL_CHUNKED
+    n_chunks = int(npz["n_chunks"])
+    assert parsed.chunks.n_chunks == n_chunks
+    assert (parsed.chunks.sym_end == npz["sym_end"]).all()
+    assert (parsed.chunks.words_end == npz["words_end"]).all()
+    assert (parsed.chunks.split_end == npz["split_end"]).all()
+    # oracle decode of the whole frozen container
+    syms = npz["symbols"]
+    out = recoil.decode_recoil(parsed.plan, parsed.stream,
+                               parsed.final_states, parsed.model)
+    assert (out == syms).all(), "oracle decode of frozen chunked bytes changed"
+    # encoder pinning, chunked framing included
+    enc = encode_interleaved_fast(syms, parsed.model)
+    plan = recoil.plan_splits(enc, int(npz["n_splits"]))
+    again = container.pack_recoil_chunked(enc, parsed.model, plan, n_chunks)
+    assert again == buf, (
+        f"re-encoding {name} produced different chunked wire bytes — the "
+        "format changed; if intentional, regenerate tests/golden/")
+    assert (enc.k_of_word == npz["k_of_word"]).all()
+
+
+@pytest.mark.parametrize("name", CHUNKED_NAMES)
+def test_golden_chunked_prefix_decodable(name):
+    """The frozen directory's streaming claim: chunk c decodes from the
+    word prefix ``words_end[c]`` alone (every later word zeroed), and
+    ``ready()`` maps received-byte counts to decodable chunk counts."""
+    from repro.core.engine import chunk_walk_batch
+    from repro.core.recoil import build_split_states, combine_plan
+    from repro.core.vectorized import WalkBatch
+
+    buf, npz, params = _load(name)
+    parsed = container.parse(buf, params)
+    syms = npz["symbols"]
+    n = len(syms)
+    batch = WalkBatch.from_splits(
+        build_split_states(parsed.plan, parsed.final_states),
+        parsed.plan.ways)
+    specs = chunk_walk_batch(batch, n, parsed.chunks.n_chunks)
+    # the wire directory is exactly the serving-side partition
+    assert [s.words_end for s in specs] == parsed.chunks.words_end.tolist()
+    assert [s.base + s.length for s in specs] == \
+        parsed.chunks.sym_end.tolist()
+    sess = DecoderSession(parsed.model)
+    for c, spec in enumerate(specs):
+        trunc = parsed.stream.copy()
+        trunc[parsed.chunks.words_end[c]:] = 0
+        ds = sess.upload_stream(trunc)
+        out = np.asarray(sess.execute(sess.prepare(spec.batch, ds,
+                                                   spec.length)))
+        assert (out == syms[spec.base:spec.base + spec.length]).all(), \
+            f"frozen chunk {c} not decodable from its declared word prefix"
+    assert parsed.chunks.ready(0) == 0
+    assert parsed.chunks.ready(len(parsed.stream)) == parsed.chunks.n_chunks

@@ -1,0 +1,495 @@
+"""Streaming content engine (DESIGN.md §10): incremental re-ingest +
+chunked pipelined decode.
+
+Covers the tentpole invariants end to end:
+
+  * ``EncoderSession.extend`` is bit-exact vs a full re-encode — static and
+    adaptive (ContextModel) models, ragged delta sizes, repeated chained
+    extends — in stream words, final states, split metadata, and the
+    symbol-indexed permutation.
+  * ``chunk_walk_batch`` partitions a request's rows so the per-chunk
+    decodes reassemble into exactly the whole-asset decode, on the jnp and
+    Pallas(interpret) backends in both layouts, and each chunk only reads
+    the stream-word prefix its ``ChunkSpec.words_end`` declares.
+  * The serving tier: ``DecodeService.extend`` (generation bump +
+    capability-registry memo invalidation), ``submit_stream`` sync and
+    through the broker, extend racing in-flight decode traffic.
+  * The u16 permutation: dtype as a function of stream size, no
+    plan-cache aliasing between dtypes, mixed-dtype fused groups.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import container, recoil
+from repro.core.adaptive import ContextModel
+from repro.core.encode import EncoderSession
+from repro.core.engine import (DecoderSession, chunk_bounds, chunk_walk_batch,
+                               with_symbol_layout)
+from repro.core.rans import RansParams, StaticModel
+from repro.core.recoil import build_split_states, combine_plan
+from repro.core.vectorized import WalkBatch, encode_interleaved_fast, \
+    walk_decode_batch
+from repro.runtime.serve import DecodeService
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_MODELS: dict = {}
+
+
+def _model(ways: int = 32) -> StaticModel:
+    if ways not in _MODELS:
+        rng = np.random.default_rng(900 + ways)
+        ref = np.concatenate([
+            np.minimum(rng.exponential(40.0, size=50_000).astype(np.int64),
+                       255),
+            np.arange(256)])
+        _MODELS[ways] = StaticModel.from_symbols(
+            ref, 256, RansParams(n_bits=11, ways=ways))
+    return _MODELS[ways]
+
+
+def _symbols(seed: int, n: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.minimum(rng.exponential(40.0, size=n).astype(np.int64), 255)
+
+
+def _ingest_result_equal(a, b) -> None:
+    """Bit-exact equality of two IngestResults (extend vs full re-ingest)."""
+    assert a.n_words == b.n_words
+    na = np.asarray(a.stream.words)[:a.n_words]
+    nb = np.asarray(b.stream.words)[:b.n_words]
+    assert (na == nb).all(), "stream words differ"
+    assert (a.final_states == b.final_states).all(), "final states differ"
+    assert a.plan.n_symbols == b.plan.n_symbols
+    assert a.plan.n_words == b.plan.n_words
+    pa = np.asarray(a.stream.by_symbol)[:a.plan.n_symbols]
+    pb = np.asarray(b.stream.by_symbol)[:b.plan.n_symbols]
+    assert (pa.astype(np.uint32) == pb.astype(np.uint32)).all(), \
+        "words_by_symbol permutations differ"
+
+
+# ----------------------------------------------------------------------
+# Incremental re-ingest: encoder tier
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n0,ds", [
+    (3_000, [200]),               # plain append
+    (3_001, [1, 1, 1]),           # repeated single-symbol (ragged head)
+    (2_999, [37, 500, 7]),        # ragged deltas, chained
+    (32, [5, 64]),                # tiny base (one group row)
+])
+def test_extend_matches_full_reencode_static(n0, ds):
+    ses = EncoderSession(_model())
+    base = _symbols(1, n0)
+    ses.ingest(base, 8, name="a")
+    grown = base
+    for i, d in enumerate(ds):
+        delta = _symbols(100 + i, d)
+        grown = np.concatenate([grown, delta])
+        res = ses.extend("a", delta)
+        full = ses.ingest(grown, res.plan.n_threads)
+        _ingest_result_equal(res, full)
+        # and the extended registration actually decodes to the content
+        out = recoil.decode_recoil(
+            res.plan, np.asarray(res.stream.words)[:res.n_words],
+            res.final_states, _model())
+        assert (out == grown).all()
+    assert ses.stats.extends == len(ds)
+
+
+def test_extend_matches_full_reencode_adaptive():
+    params = RansParams(n_bits=10, ways=16)
+    n0, ds = 2_000, [31, 500, 7]
+    total = n0 + sum(ds)
+    rng = np.random.default_rng(5)
+    ctx = (np.arange(total) // 257 % 4).astype(np.int32)
+    cm = ContextModel.from_scale_table(
+        np.array([8.0, 16.0, 32.0, 64.0]), ctx, 256, params)
+    syms = np.minimum(rng.exponential(40.0, size=total).astype(np.int64), 255)
+    ses = EncoderSession(cm)
+    ses.ingest(syms[:n0], 6, name="a")
+    off = n0
+    for d in ds:
+        res = ses.extend("a", syms[off:off + d])   # ctx auto-sliced
+        off += d
+        full = ses.ingest(syms[:off], res.plan.n_threads)
+        _ingest_result_equal(res, full)
+    # adaptive decode of the final extended stream is bit-exact
+    batch = WalkBatch.from_splits(
+        build_split_states(res.plan, res.final_states), params.ways)
+    words = np.asarray(res.stream.words)[:res.n_words].astype(np.uint16)
+    out = walk_decode_batch(batch, words, None, res.plan.n_symbols,
+                            ctx_model=cm)
+    assert (np.asarray(out) == syms[:off]).all()
+
+
+def test_extend_requires_resume_state():
+    ses = EncoderSession(_model())
+    ses.ingest(_symbols(2, 1_000), 4)          # no name -> no resume state
+    with pytest.raises(KeyError, match="no resumable ingest state"):
+        ses.extend("a", _symbols(3, 10))
+    ses.ingest(_symbols(2, 1_000), 4, name="a")
+    assert ses.can_extend("a") and not ses.can_extend("b")
+    with pytest.raises(ValueError, match="non-empty"):
+        ses.extend("a", np.array([], np.int64))
+    ses.forget("a")
+    assert not ses.can_extend("a")
+
+
+def test_extend_warm_path_zero_recompiles():
+    """Same-bucket extends after the first reuse the suffix executable AND
+    the splice executables — the streaming bench's 0-recompile guard in
+    miniature."""
+    ses = EncoderSession(_model())
+    ses.ingest(_symbols(4, 40_000), 16, name="a")
+    ses.extend("a", _symbols(40, 1_000))       # compiles suffix + splices
+    before = ses.stats.compiles
+    for i in range(3):
+        ses.extend("a", _symbols(41 + i, 1_000))
+    assert ses.stats.compiles == before, "warm extends must not recompile"
+
+
+# ----------------------------------------------------------------------
+# Chunked decode: engine tier
+# ----------------------------------------------------------------------
+
+def _chunk_batch(plan, finals, n_threads):
+    thin = combine_plan(plan, n_threads)
+    return WalkBatch.from_splits(build_split_states(thin, finals),
+                                 thin.ways), thin
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+@pytest.mark.parametrize("layout", ["symbol", "pointer"])
+@pytest.mark.parametrize("n_chunks", [1, 3, 8])
+def test_chunked_decode_bit_exact(impl, layout, n_chunks):
+    model = _model()
+    syms = _symbols(7, 20_000)
+    enc = encode_interleaved_fast(syms, model)
+    plan = recoil.plan_splits(enc, 16)
+    sess = DecoderSession(model, impl=impl)
+    ds = sess.upload_stream(enc.stream)
+    if layout == "symbol":
+        ds = with_symbol_layout(ds, enc.k_of_word, len(syms))
+    batch, thin = _chunk_batch(plan, enc.final_states, 16)
+    specs = chunk_walk_batch(batch, len(syms), n_chunks)
+    assert len(specs) == min(n_chunks, 16)
+    got = np.concatenate([
+        np.asarray(sess.execute(sess.prepare(s.batch, ds, s.length)))
+        for s in specs])
+    assert (got == syms).all(), f"{impl}/{layout} chunked decode differs"
+    # chunk lengths tile the asset; words_end is monotone and ends at the
+    # stream length (prefix-arrival decodability)
+    assert sum(s.length for s in specs) == len(syms)
+    ends = [s.words_end for s in specs]
+    assert all(a <= b for a, b in zip(ends, ends[1:]))
+    assert ends[-1] == enc.n_words
+
+
+def test_chunk_reads_only_its_word_prefix():
+    """Zeroing every stream word at or past ``words_end[c]`` must not change
+    chunk c's output — the property that makes decode-while-arriving
+    sound."""
+    model = _model()
+    syms = _symbols(8, 12_000)
+    enc = encode_interleaved_fast(syms, model)
+    plan = recoil.plan_splits(enc, 12)
+    sess = DecoderSession(model)
+    batch, _ = _chunk_batch(plan, enc.final_states, 12)
+    specs = chunk_walk_batch(batch, len(syms), 4)
+    for spec in specs:
+        trunc = enc.stream.copy()
+        trunc[spec.words_end:] = 0
+        ds = sess.upload_stream(trunc)
+        out = np.asarray(sess.execute(sess.prepare(spec.batch, ds,
+                                                   spec.length)))
+        assert (out == syms[spec.base:spec.base + spec.length]).all(), \
+            f"chunk at base {spec.base} read past words_end={spec.words_end}"
+
+
+def test_chunk_bounds_cover_rows():
+    for n_rows in (1, 5, 12, 64):
+        for n_chunks in (1, 2, 7, 64, 100):
+            b = chunk_bounds(n_rows, n_chunks)
+            assert b[0][0] == 0 and b[-1][1] == n_rows
+            assert all(r0 < r1 for r0, r1 in b)
+            assert all(p[1] == q[0] for p, q in zip(b, b[1:]))
+            assert len(b) == min(n_chunks, n_rows)
+
+
+def test_chunked_decode_sharded_subprocess():
+    """Chunked decode + extend on the sharded executor (4 forced host
+    devices, own subprocess like the other sharded suites)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        import jax
+        assert len(jax.devices()) == 4
+        from repro.core.rans import RansParams, StaticModel
+        from repro.runtime.serve import DecodeService
+
+        rng = np.random.default_rng(31)
+        ref = np.concatenate([np.minimum(
+            rng.exponential(40.0, 50_000).astype(np.int64), 255),
+            np.arange(256)])
+        model = StaticModel.from_symbols(ref, 256,
+                                         RansParams(n_bits=11, ways=32))
+        svc = DecodeService(model, impl="sharded")
+        syms = np.minimum(rng.exponential(40.0, 30_000).astype(np.int64), 255)
+        svc.ingest("a", syms, 16)
+        whole = np.asarray(svc.decode("a", 16))
+        assert (whole == syms).all()
+        parts = [np.asarray(p) for p in svc.decode_chunks("a", 16, 4)]
+        assert (np.concatenate(parts) == syms).all(), "sharded chunks differ"
+        t = svc.submit_stream("a", 16, n_chunks=4)
+        assert (np.asarray(t.result()) == syms).all()
+        delta = np.minimum(rng.exponential(40.0, 2_000).astype(np.int64), 255)
+        svc.extend("a", delta)
+        grown = np.concatenate([syms, delta])
+        assert (np.asarray(svc.decode("a", 16)) == grown).all()
+        parts = [np.asarray(p) for p in svc.decode_chunks("a", 16, 4)]
+        assert (np.concatenate(parts) == grown).all()
+        print("OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": SRC}, timeout=900)
+    assert out.returncode == 0, (out.stderr[-3000:], out.stdout[-500:])
+    assert "OK" in out.stdout
+
+
+# ----------------------------------------------------------------------
+# u16 permutation
+# ----------------------------------------------------------------------
+
+def test_permutation_dtype_follows_stream_size():
+    model = _model()
+    svc = DecodeService(model)
+    svc.ingest("small", _symbols(10, 8_000), 8)
+    ds = svc.content("small").stream
+    assert ds.by_symbol.dtype == np.uint16, \
+        f"small stream permutation is {ds.by_symbol.dtype}, want uint16"
+    assert (np.asarray(svc.decode("small", 8))
+            == _symbols(10, 8_000)).all()
+    # host-registered content takes the same dtype policy
+    syms = _symbols(11, 6_000)
+    enc = encode_interleaved_fast(syms, model)
+    plan = recoil.plan_splits(enc, 8)
+    svc.register("host", plan, enc.stream, enc.final_states,
+                 emission_log=enc.k_of_word)
+    assert svc.content("host").stream.by_symbol.dtype == np.uint16
+    assert (np.asarray(svc.decode("host", 8)) == syms).all()
+
+
+def test_u16_and_u32_streams_do_not_alias_plan_cache():
+    """Two contents in the same buckets but different permutation dtypes
+    must not share an executable keyed on the wrong width."""
+    model = _model()
+    sess = DecoderSession(model)
+    syms = _symbols(12, 30_000)
+    enc = encode_interleaved_fast(syms, model)
+    plan = recoil.plan_splits(enc, 8)
+    ds = sess.upload_stream(enc.stream)
+    ds16 = with_symbol_layout(ds, enc.k_of_word, len(syms))
+    assert ds16.by_symbol.dtype == np.uint16
+    # forge a u32 copy of the same stream (what a fused group produces)
+    import dataclasses as dc
+    import jax.numpy as jnp
+    ds32 = dc.replace(ds16, by_symbol=ds16.by_symbol.astype(jnp.uint32))
+    batch = WalkBatch.from_splits(
+        build_split_states(plan, enc.final_states), plan.ways)
+    p16 = sess.prepare(batch, ds16, len(syms))
+    p32 = sess.prepare(batch, ds32, len(syms))
+    assert p16.key != p32.key, "dtype missing from the plan cache key"
+    assert (np.asarray(sess.execute(p16)) == syms).all()
+    assert (np.asarray(sess.execute(p32)) == syms).all()
+
+
+def test_mixed_dtype_fused_group():
+    """A fused microbatch over one u16-permutation content and one large
+    u32 one upcasts to a common width and stays bit-exact."""
+    model = _model()
+    svc = DecodeService(model, microbatch=2)
+    small = _symbols(13, 5_000)
+    # large enough that its stream exceeds 2^16 words -> u32 permutation
+    # (~0.42 words/symbol under this model, so 180k symbols ≈ 76k words)
+    big = _symbols(14, 180_000)
+    svc.ingest("small", small, 8)
+    svc.ingest("big", big, 8)
+    assert svc.content("small").stream.by_symbol.dtype == np.uint16
+    assert svc.content("big").stream.by_symbol.dtype == np.uint32
+    t1 = svc.submit("small", 8)
+    t2 = svc.submit("big", 8)
+    svc.flush()
+    assert (np.asarray(t1.result()) == small).all()
+    assert (np.asarray(t2.result()) == big).all()
+    assert svc.stats.fused_dispatches == 1
+
+
+# ----------------------------------------------------------------------
+# Serving tier: extend + streams + broker
+# ----------------------------------------------------------------------
+
+def test_service_extend_generation_and_memo_invalidation():
+    model = _model()
+    svc = DecodeService(model)
+    base = _symbols(20, 10_000)
+    svc.ingest("a", base, 16)
+    assert (np.asarray(svc.decode("a", 8)) == base).all()   # memoized plan
+    gen = svc.generation("a")
+    broker = svc.start_pipeline()
+    try:
+        reg = broker.registry
+        reg.declare("phone", 8)
+        plan1 = reg.plan_for("a", "phone")     # memoized at gen
+        assert plan1.n_symbols == len(base)
+        delta = _symbols(21, 700)
+        svc.extend("a", delta)
+        grown = np.concatenate([base, delta])
+        assert svc.generation("a") == gen + 1
+        # the per-(name, n_threads) plan memo was invalidated: the decode
+        # reflects the grown asset, not the stale plan
+        assert (np.asarray(svc.decode("a", 8)) == grown).all()
+        # capability-registry memo re-derives against the new generation
+        plan2 = reg.plan_for("a", "phone")
+        assert plan2.n_symbols == len(grown) != plan1.n_symbols
+        # ...and the thinned wire payload serves the grown asset too
+        buf = reg.container_for("a", "phone")
+        from repro.core import container as cont
+        parsed = cont.parse(buf, model.params)
+        assert parsed.n_symbols == len(grown)
+    finally:
+        svc.stop_pipeline()
+
+
+def test_extend_during_inflight_decode_via_broker():
+    """Extends racing decode traffic through the broker: every response is
+    internally consistent (some generation's complete asset), responses
+    after the extend ticket resolves see the grown asset."""
+    model = _model()
+    svc = DecodeService(model)
+    base = _symbols(22, 20_000)
+    svc.ingest("a", base, 16)
+    versions = [base]
+    broker = svc.start_pipeline()
+    try:
+        tickets = [svc.submit("a", 8) for _ in range(6)]
+        ext = []
+        for i in range(3):
+            delta = _symbols(23 + i, 1_000)
+            versions.append(np.concatenate([versions[-1], delta]))
+            ext.append(broker.submit_extend("a", delta))
+            tickets.extend(svc.submit("a", 8) for _ in range(4))
+        for t in ext:
+            t.result(timeout=120)
+        broker.drain(timeout=120)
+        for t in tickets:
+            out = np.asarray(t.result(timeout=120))
+            assert any(len(v) == len(out) and (out == v).all()
+                       for v in versions), "response matches no version"
+        # post-drain: the newest version serves
+        assert (np.asarray(svc.decode("a", 8)) == versions[-1]).all()
+        assert broker.snapshot()["extend_events"] == 3
+    finally:
+        svc.stop_pipeline()
+
+
+def test_submit_stream_sync_and_broker():
+    model = _model()
+    svc = DecodeService(model)
+    syms = _symbols(25, 24_000)
+    svc.ingest("a", syms, 16)
+    t = svc.submit_stream("a", 16, n_chunks=4)
+    # per-chunk arrival order + reassembly
+    got = [np.asarray(c) for c in t]
+    assert len(got) == 4 and (np.concatenate(got) == syms).all()
+    assert t.first_chunk_at is not None
+    assert t.completed_at >= t.first_chunk_at >= t.submitted_at
+    assert [s.base for s in t.specs] == \
+        list(np.cumsum([0] + [s.length for s in t.specs[:-1]]))
+    # clamped chunk count
+    assert svc.submit_stream("a", 2, n_chunks=9).n_chunks == 2
+    broker = svc.start_pipeline()
+    try:
+        bt = svc.submit_stream("a", 16, n_chunks=4)   # routes via broker
+        assert (np.asarray(bt.result()) == syms).all()
+        with pytest.raises(KeyError):
+            broker.submit_stream("nope", 8)
+        assert broker.snapshot()["stream_dispatches"] >= 1
+    finally:
+        svc.stop_pipeline()
+
+
+def test_stream_ticket_error_propagates():
+    model = _model()
+    svc = DecodeService(model)
+    svc.ingest("a", _symbols(26, 5_000), 8)
+    from repro.runtime.serve import StreamTicket
+    bad = StreamTicket(99)    # wrong chunk count for the request
+    with pytest.raises(ValueError, match="99 chunks"):
+        svc.dispatch_stream("a", 8, 4, bad)
+    with pytest.raises(ValueError):
+        bad.chunk(0)          # the failure is delivered to waiters too
+
+
+# ----------------------------------------------------------------------
+# Chunked wire container
+# ----------------------------------------------------------------------
+
+def test_chunked_container_round_trip_and_prefix_decode():
+    model = _model()
+    syms = _symbols(30, 9_000)
+    enc = encode_interleaved_fast(syms, model)
+    plan = recoil.plan_splits(enc, 12)
+    buf = container.pack_recoil_chunked(enc, model, plan, 4)
+    parsed = container.parse(buf, model.params)
+    assert parsed.kind == container.KIND_RECOIL_CHUNKED
+    assert parsed.chunks.n_chunks == 4
+    assert (parsed.stream == enc.stream).all()
+    # identical stream bytes as KIND_RECOIL — chunking is directory-only
+    assert buf.endswith(enc.stream.astype("<u2").tobytes())
+    # directory agrees with the serving-side chunk partition at full
+    # parallelism (same chunk_bounds cut)
+    sess = DecoderSession(model)
+    batch = WalkBatch.from_splits(
+        build_split_states(parsed.plan, parsed.final_states), plan.ways)
+    specs = chunk_walk_batch(batch, len(syms), 4)
+    assert [s.words_end for s in specs] == parsed.chunks.words_end.tolist()
+    assert [s.base + s.length for s in specs] == \
+        parsed.chunks.sym_end.tolist()
+    # each chunk decodable from its declared word prefix
+    off = 0
+    for c, spec in enumerate(specs):
+        trunc = parsed.stream.copy()
+        trunc[parsed.chunks.words_end[c]:] = 0
+        ds = sess.upload_stream(trunc)
+        out = np.asarray(sess.execute(sess.prepare(spec.batch, ds,
+                                                   spec.length)))
+        assert (out == syms[off:off + spec.length]).all()
+        off += spec.length
+    # streaming-receiver arithmetic
+    assert parsed.chunks.ready(0) == 0
+    assert parsed.chunks.ready(int(parsed.chunks.words_end[1])) == 2
+    assert parsed.chunks.ready(enc.n_words) == 4
+
+
+def test_chunked_container_repack_is_byte_identical():
+    model = _model()
+    syms = _symbols(31, 7_000)
+    enc = encode_interleaved_fast(syms, model)
+    plan = recoil.plan_splits(enc, 10)
+    a = container.pack_recoil_chunked(enc, model, plan, 3)
+    b = container.pack_recoil_chunked(enc, model, plan, 3)
+    assert a == b
+    # a different chunking shares every byte except the directory
+    c = container.pack_recoil_chunked(enc, model, plan, 5)
+    assert a != c and a[-2 * enc.n_words:] == c[-2 * enc.n_words:]
