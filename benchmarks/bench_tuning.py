@@ -1,0 +1,161 @@
+"""Autotuned bucket ladder vs the default pow2/midpoint ladder (DESIGN §11).
+
+The legacy ladder bounds padded compute at ~1.5x per warm dispatch; the
+tuner replaces the guess with measured breakpoints.  The sweep here is
+adversarial for the legacy ladder on purpose — request sizes whose step
+counts land just above its rungs (the regime every ladder has somewhere) —
+and representative of the tuner's pitch: when traffic clusters, measured
+breakpoints put rungs exactly where the traffic is.
+
+Measured (jnp impl, warm = plan-cached, execute-only, median of repeats):
+
+  * default: the mixed-size sweep through a legacy-ladder
+    ``DecoderSession`` — every size already warm, 0 recompiles expected
+    (that is the seed engine's own guarantee);
+  * tuned:   the SAME requests through a session using the profile the
+    :class:`~repro.core.tuning.Autotuner` derived from this workload (real
+    compile/execute probes on this backend, breakpoint DP).  Acceptance:
+    >= 1.15x warm throughput over default with 0 recompiles in the
+    measured window;
+  * reuse:   a second tuner invocation against the persisted DB must
+    perform 0 re-measurements (the workload signature matches).
+
+Writes ``benchmarks/results/tuning.json`` (the DB artifact CI uploads) and
+``benchmarks/results/tuning_bench.json`` (the guarded summary); returns
+CSV rows for the run.py driver.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import recoil
+from repro.core.engine import DecoderSession
+from repro.core.recoil import build_split_states
+from repro.core.tuning import Autotuner
+from repro.core.vectorized import WalkBatch, encode_interleaved_fast
+
+from . import datasets
+
+# Sizes chosen so per-split scan steps land in the upper half of a legacy
+# bucket (pad 1.2-1.5x); the tuned ladder gets exact rungs there.  steps
+# ~= n / (ways * n_splits) with ways=32, n_splits=32 -> n / 1024.
+QUICK_SIZES = (1_070_000, 1_130_000, 1_200_000, 1_290_000,
+               1_360_000, 1_430_000)
+FULL_SIZES = (2_140_000, 2_260_000, 2_400_000, 2_580_000,
+              2_720_000, 2_860_000)
+N_SPLITS = 32
+MAX_BATCH = 8
+DB_PATH = "benchmarks/results/tuning.json"
+
+
+def _sweep(sess: DecoderSession, reqs: list, repeats: int) -> tuple:
+    """Warm execute-only sweep: plans prepared (and verified) up front,
+    timed region is pure cached-executable dispatch — the steady state
+    both ladders serve.  Returns (median seconds, recompiles)."""
+    plans = []
+    for r in reqs:
+        ds = sess.upload_stream(r["enc"].stream)
+        plan = sess.prepare(r["batch"], ds, r["n"])
+        out = np.asarray(sess.execute(plan))          # compile + verify
+        assert (out == r["syms"]).all()
+        plans.append(plan)
+    compiles_before = sess.stats.compiles
+    ts = []
+    for _ in range(max(repeats, 3)):
+        t0 = time.perf_counter()
+        for plan in plans:
+            jax.block_until_ready(sess.execute(plan))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), sess.stats.compiles - compiles_before
+
+
+def run(quick: bool = False, repeats: int = 3) -> list:
+    sizes = QUICK_SIZES if quick else FULL_SIZES
+    from repro.core.rans import RansParams, StaticModel
+    syms = datasets.rand_exponential(50, max(sizes))
+    params = RansParams(n_bits=11, ways=32)
+    model = StaticModel.from_symbols(syms, 256, params)
+
+    reqs = []
+    for n in sizes:
+        enc = encode_interleaved_fast(syms[:n], model)
+        plan = recoil.plan_splits(enc, N_SPLITS)
+        batch = WalkBatch.from_splits(
+            build_split_states(plan, enc.final_states), plan.ways)
+        reqs.append({"n": n, "enc": enc, "batch": batch, "syms": syms[:n]})
+    sweep_mb = sum(sizes) / 1e6
+
+    # ---- tune: observe this workload, measure compile/execute costs on
+    # this backend, persist the profile (fresh DB per bench run so the
+    # artifact always reflects this container)
+    if os.path.exists(DB_PATH):
+        os.unlink(DB_PATH)
+    tuner = Autotuner(model, impl="jnp", repeats=repeats)
+    tuner._reqs = {r["n"]: {"n": r["n"], "syms": r["syms"], "enc": r["enc"],
+                            "batch": r["batch"]} for r in reqs}
+    t0 = time.perf_counter()
+    # horizon: expected warm hits amortizing each compile — steady-state
+    # serving, so favor exact rungs over compile thrift.
+    profile = tuner.tune(sizes, db_path=DB_PATH, max_batch=MAX_BATCH,
+                         horizon=10_000)
+    tune_s = time.perf_counter() - t0
+
+    # ---- second invocation against the persisted DB: 0 re-measurements
+    tuner2 = Autotuner(model, impl="jnp", repeats=repeats)
+    tuner2._reqs = tuner._reqs
+    profile2 = tuner2.tune(sizes, db_path=DB_PATH, max_batch=MAX_BATCH,
+                           horizon=10_000)
+    assert profile2.workload_sig == profile.workload_sig
+
+    # ---- default (legacy ladder) vs tuned ladder, identical requests
+    default_s, default_rc = _sweep(DecoderSession(model, impl="jnp"),
+                                   reqs, repeats)
+    tuned_s, tuned_rc = _sweep(DecoderSession(model, impl="jnp",
+                                              policy=profile),
+                               reqs, repeats)
+
+    summary = {
+        "sizes": list(sizes),
+        "n_splits": N_SPLITS,
+        "sweep_mb": sweep_mb,
+        "default_mb_per_s": round(sweep_mb / default_s, 2),
+        "tuned_mb_per_s": round(sweep_mb / tuned_s, 2),
+        "tuned_speedup": round(default_s / tuned_s, 3),
+        "default_recompiles_warm": default_rc,
+        "tuned_recompiles_warm": tuned_rc,
+        "tuner_measurements": tuner.measurements,
+        "tuner_remeasurements_second_run": tuner2.measurements,
+        "tune_seconds": round(tune_s, 2),
+        "profile_key": profile.key,
+        "work_ladder_rungs": len(profile.work_ladder),
+        "microbatch_sizes": list(profile.microbatch_sizes),
+        "cost_model": {k: profile.meta[k] for k in
+                       ("compile_s", "exec_slope_s", "exec_intercept_s")},
+        "db_path": DB_PATH,
+    }
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/tuning_bench.json", "w") as f:
+        json.dump(summary, f, indent=2)
+    return [
+        {"bench": "tuning", "path": "default_warm", "sizes": len(sizes),
+         "mb_per_s": summary["default_mb_per_s"], "recompiles": default_rc},
+        {"bench": "tuning", "path": "tuned_warm", "sizes": len(sizes),
+         "mb_per_s": summary["tuned_mb_per_s"], "recompiles": tuned_rc},
+        {"bench": "tuning", "path": "db_reuse", "sizes": len(sizes),
+         "mb_per_s": "", "recompiles": tuner2.measurements},
+    ]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    print(json.dumps(rows, indent=2))

@@ -13,19 +13,26 @@ Emits CSV to stdout and benchmarks/results/*.csv.  Suites:
     pipeline          DESIGN §8    async broker vs synchronous serving loop
     streaming         DESIGN §10   incremental re-ingest + chunked first-chunk latency
     roofline          §Roofline    aggregates dry-run JSONs (if present)
+    tuning            DESIGN §11   autotuned vs legacy bucket ladder + DB reuse
+
+Also writes ``benchmarks/results/BENCH_summary.json`` — one consolidated
+machine-readable record per run (suite rows + per-suite wall time + the
+standalone suite summaries such as tuning_bench.json) for cross-run
+comparison in CI.
 """
 
 from __future__ import annotations
 
 import argparse
 import csv
+import json
 import os
 import sys
 import time
 
 from . import (bench_combine, bench_compression, bench_encode, bench_engine,
                bench_partition_sweep, bench_pipeline, bench_roofline,
-               bench_streaming, bench_throughput)
+               bench_streaming, bench_throughput, bench_tuning)
 
 SUITES = {
     "compression": bench_compression.run,
@@ -37,7 +44,29 @@ SUITES = {
     "pipeline": bench_pipeline.run,
     "streaming": bench_streaming.run,
     "roofline": bench_roofline.run,
+    "tuning": bench_tuning.run,
 }
+
+# Suites that write their own guarded JSON summary; BENCH_summary.json
+# inlines these so CI reads ONE artifact.
+SUITE_SUMMARIES = {
+    "tuning": "benchmarks/results/tuning_bench.json",
+}
+
+
+def write_summary(results: dict) -> None:
+    path = "benchmarks/results/BENCH_summary.json"
+    payload = {"quick": results.pop("_quick", False), "suites": {}}
+    for name, entry in results.items():
+        payload["suites"][name] = entry
+        extra = SUITE_SUMMARIES.get(name)
+        if extra and os.path.exists(extra):
+            with open(extra) as f:
+                payload["suites"][name]["summary"] = json.load(f)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"\nwrote {path}", flush=True)
 
 
 def main() -> None:
@@ -48,6 +77,7 @@ def main() -> None:
     args = ap.parse_args()
     os.makedirs("benchmarks/results", exist_ok=True)
     names = [args.only] if args.only else list(SUITES)
+    summary = {"_quick": args.quick}
     for name in names:
         t0 = time.time()
         try:
@@ -56,6 +86,7 @@ def main() -> None:
             rows = SUITES[name]()
         dt = time.time() - t0
         print(f"\n## {name} ({dt:.1f}s)", flush=True)
+        summary[name] = {"seconds": round(dt, 1), "rows": rows or []}
         if not rows:
             continue
         keys = sorted({k for r in rows for k in r})
@@ -68,6 +99,7 @@ def main() -> None:
             w.writeheader()
             for r in rows:
                 w.writerow(r)
+    write_summary(summary)
     print("\nbenchmarks complete", flush=True)
 
 

@@ -15,6 +15,9 @@ Public API (see DESIGN.md §1 for the mapping to paper sections):
                  executable cache; DESIGN.md §4)
   encode       — persistent EncoderSession: device-side encode + Def-4.1
                  split planning, the ingest mirror of engine (DESIGN.md §5)
+  tuning       — measurement-driven autotuner + persisted tuning database:
+                 tuned bucket ladders / executor parameters that sessions
+                 consult at plan time when opted in (DESIGN.md §11)
 """
 
 from .rans import DEFAULT_PARAMS, RansParams, StaticModel  # noqa: F401
@@ -28,6 +31,7 @@ from .conventional import (ConventionalEncoded, decode_conventional,  # noqa: F4
 from .vectorized import (WalkBatch, decode_conventional_fast,  # noqa: F401
                          decode_recoil_fast, encode_interleaved_fast,
                          walk_decode_batch)
-from .engine import (DecoderSession, DeviceStream,  # noqa: F401
+from .engine import (BucketPolicy, DecoderSession, DeviceStream,  # noqa: F401
                      pow2_bucket, work_bucket)
 from .encode import EncoderSession, IngestResult  # noqa: F401
+from .tuning import Autotuner, Profile, TuningDB  # noqa: F401

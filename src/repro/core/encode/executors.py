@@ -25,9 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..engine.plan import BucketPolicy, LEGACY_POLICY
 from .ops import ingest_pipeline
-from .plan import (EncodePlan, splits_slot_bucket, stream_capacity_buckets,
-                   work_bucket, pow2_bucket)
+from .plan import (EncodePlan, splits_slot_bucket, stream_capacity_buckets)
 
 _PIPE_STATICS = ("n_bits", "ways", "words_bucket", "splits_bucket", "window",
                  "expand_rounds")
@@ -53,13 +53,19 @@ class EncodeExecutor:
     impl = "?"
 
     def __init__(self, f_tab: jax.Array, F_tab: jax.Array, *, n_bits: int,
-                 ways: int, adaptive: bool, window: int):
+                 ways: int, adaptive: bool, window: int,
+                 policy: BucketPolicy | None = None):
         self.f_tab = f_tab
         self.F_tab = F_tab
         self.n_bits = n_bits
         self.ways = ways
         self.adaptive = adaptive
         self.window = window
+        # Bucket ladder for the group-count compute dim (DESIGN.md §11);
+        # ``policy.tag`` joins every plan key so ladders never alias.
+        # Stream capacity / splits slot buckets stay on their fixed ladders
+        # (result-shape contract shared with the session's materializers).
+        self.policy = policy if policy is not None else LEGACY_POLICY
 
     def plan(self, symbols: np.ndarray, n_splits: int,
              ctx: np.ndarray | None = None) -> EncodePlan:
@@ -111,12 +117,12 @@ class JnpEncodeExecutor(EncodeExecutor):
     def plan(self, symbols: np.ndarray, n_splits: int,
              ctx: np.ndarray | None = None) -> EncodePlan:
         N = int(np.asarray(symbols).size)
-        g_b = work_bucket(-(-N // self.ways) if N else 0, 1)
+        g_b = self.policy.work(-(-N // self.ways) if N else 0, 1)
         fast_b, full_b = stream_capacity_buckets(N)
         splits_b = splits_slot_bucket(n_splits)
         sym_gw, active, ctx_gw = self._group_arrays(symbols, g_b, ctx)
-        key = (self.impl, self.adaptive, self.n_bits, self.ways, g_b,
-               splits_b, self.window)
+        key = (self.impl, self.policy.tag, self.adaptive, self.n_bits,
+               self.ways, g_b, splits_b, self.window)
         args = (jnp.asarray(sym_gw), jnp.asarray(active), self.f_tab,
                 self.F_tab, jnp.int32(N), jnp.int32(n_splits),
                 None if ctx_gw is None else jnp.asarray(ctx_gw))
@@ -144,7 +150,7 @@ class JnpEncodeExecutor(EncodeExecutor):
         if not 0 <= head < W:
             raise ValueError(f"head must be in [0, {W}), got {head}")
         L = head + d                       # local flat symbol span
-        g_b = work_bucket(-(-L // W) if L else 0, 1)
+        g_b = self.policy.work(-(-L // W) if L else 0, 1)
         fast_b, full_b = stream_capacity_buckets(d)   # <= 1 word per symbol
         splits_b = splits_slot_bucket(n_splits)
         pad = g_b * W - L
@@ -163,8 +169,8 @@ class JnpEncodeExecutor(EncodeExecutor):
                                      np.zeros(pad, np.int32)]).reshape(g_b, W)
         else:
             ctx_gw = None
-        key = (self.impl, "extend", self.adaptive, self.n_bits, self.ways,
-               g_b, splits_b, self.window)
+        key = (self.impl, "extend", self.policy.tag, self.adaptive,
+               self.n_bits, self.ways, g_b, splits_b, self.window)
         args = (jnp.asarray(sym_gw), jnp.asarray(active), self.f_tab,
                 self.F_tab, jnp.int32(L), jnp.int32(n_splits),
                 None if ctx_gw is None else jnp.asarray(ctx_gw),
@@ -186,8 +192,8 @@ class JnpEncodeExecutor(EncodeExecutor):
                     else [int(n) for n in n_splits])
         if len(n_splits) != B:
             raise ValueError("n_splits must be a scalar or one per content")
-        b_b = pow2_bucket(B)
-        g_b = work_bucket(max(-(-n // self.ways) for n in sizes), 1)
+        b_b = self.policy.mem(B)
+        g_b = self.policy.work(max(-(-n // self.ways) for n in sizes), 1)
         fast_b, full_b = stream_capacity_buckets(max(sizes))
         splits_b = splits_slot_bucket(max(n_splits))
         empty = np.zeros(0, np.int32)
@@ -198,8 +204,8 @@ class JnpEncodeExecutor(EncodeExecutor):
         sym_gw = np.stack([r[0] for r in rows])
         active = np.stack([r[1] for r in rows])
         ctx_gw = (np.stack([r[2] for r in rows]) if self.adaptive else None)
-        key = (self.impl, "batch", b_b, self.adaptive, self.n_bits,
-               self.ways, g_b, splits_b, self.window)
+        key = (self.impl, "batch", self.policy.tag, b_b, self.adaptive,
+               self.n_bits, self.ways, g_b, splits_b, self.window)
         args = (jnp.asarray(sym_gw), jnp.asarray(active), self.f_tab,
                 self.F_tab,
                 jnp.asarray(np.asarray(sizes + [0] * (b_b - B), np.int32)),
@@ -229,8 +235,10 @@ class JnpEncodeExecutor(EncodeExecutor):
 
 
 def make_encode_executor(impl: str, f_tab, F_tab, *, n_bits, ways, adaptive,
-                         window) -> EncodeExecutor:
+                         window,
+                         policy: BucketPolicy | None = None) -> EncodeExecutor:
     if impl == "jnp":
         return JnpEncodeExecutor(f_tab, F_tab, n_bits=n_bits, ways=ways,
-                                 adaptive=adaptive, window=window)
+                                 adaptive=adaptive, window=window,
+                                 policy=policy)
     raise ValueError(f"unknown encode impl {impl!r}")

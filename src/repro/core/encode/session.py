@@ -32,6 +32,7 @@ request-local data and need no lock.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import threading
@@ -58,6 +59,7 @@ class EncodeStats:
     encodes: int = 0       # pipeline dispatches (batch counts as one)
     fallbacks: int = 0     # full-tier re-runs (round-0 miss / overflow)
     extends: int = 0       # incremental re-ingests (suffix-only encodes)
+    resume_evictions: int = 0   # LRU-evicted resumable tails
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -139,23 +141,44 @@ class EncoderSession:
     candidate half-window (must match the oracle's to stay bit-exact).
     ``fast_rounds=False`` disables the round-0 fast path and always runs
     the full-rounds executable (mainly for tests).
+
+    ``policy`` selects the bucket ladder for the group-count compute dim
+    (same contract as :class:`DecoderSession`: ``None`` = legacy unless
+    ``REPRO_TUNING_DB`` is set, ``"tuned"``/``"legacy"``, or a
+    :class:`~repro.core.engine.plan.BucketPolicy` instance).
+
+    ``resume_capacity`` bounds the per-name resumable-tail map that
+    :meth:`extend` reads: least-recently-used tails beyond it are evicted
+    (``stats.resume_evictions``) and later extends of those names fall back
+    to a full re-ingest — without the bound a long-lived service pins one
+    device-resident stream per content name forever.
     """
 
     def __init__(self, model, *, impl: str = "jnp", window: int = 96,
-                 fast_rounds: bool = True):
+                 fast_rounds: bool = True, policy=None,
+                 resume_capacity: int = 64):
         self.model = model
         self.adaptive = np.asarray(model.f).ndim == 2
         self.params = model.params
         f = np.asarray(model.f).astype(np.int32)
         F = np.asarray(model.F).astype(np.int32)
         self.alphabet = f.shape[-1]
+        from ..tuning import resolve_policy
+        self.policy, self.tuning_profile = resolve_policy(
+            policy, impl=impl, layout="encode")
         self.executor = make_encode_executor(
             impl, jnp.asarray(f), jnp.asarray(F), n_bits=self.params.n_bits,
-            ways=self.params.ways, adaptive=self.adaptive, window=window)
+            ways=self.params.ways, adaptive=self.adaptive, window=window,
+            policy=self.policy)
         self.fast_rounds = fast_rounds
+        if resume_capacity < 1:
+            raise ValueError("resume_capacity must be >= 1")
+        self.resume_capacity = resume_capacity
         self._exec: dict[tuple, object] = {}
         self._lock = threading.Lock()   # guards _exec + stats (see header)
-        self._resume: dict[str, _ResumeState] = {}   # guarded by _lock
+        # LRU of resumable tails, most-recent last; guarded by _lock.
+        self._resume: collections.OrderedDict[str, _ResumeState] = \
+            collections.OrderedDict()
         self.stats = EncodeStats()
 
     # ------------------------------------------------------------------
@@ -242,6 +265,10 @@ class EncoderSession:
                 n_symbols=res.plan.n_symbols,
                 final_states=np.asarray(res.final_states),
                 stream=res.stream, plan=res.plan)
+            self._resume.move_to_end(name)
+            while len(self._resume) > self.resume_capacity:
+                self._resume.popitem(last=False)
+                self.stats.resume_evictions += 1
 
     def can_extend(self, name: str) -> bool:
         with self._lock:
@@ -267,6 +294,8 @@ class EncoderSession:
         """
         with self._lock:
             state = self._resume.get(name)
+            if state is not None:
+                self._resume.move_to_end(name)   # touch: extend = recent use
         if state is None:
             raise KeyError(
                 f"no resumable ingest state for {name!r}; fall back to a "

@@ -22,17 +22,21 @@ Public API is re-exported here; ``from repro.core.engine import
 DecoderSession`` keeps working exactly as before the split.
 """
 
-from .plan import (ChunkSpec, DecodePlan, DeviceStream, LAYOUTS, chunk_bounds,
-                   chunk_walk_batch, concat_walk_batches,
-                   derive_symbol_layout, pad_split_arrays, pow2_bucket,
-                   with_symbol_layout, work_bucket)
+from .plan import (BucketPolicy, ChunkSpec, DecodePlan, DeviceStream,
+                   LAYOUTS, LEGACY_POLICY, LadderBucketPolicy,
+                   LegacyBucketPolicy, chunk_bounds, chunk_walk_batch,
+                   concat_walk_batches, derive_symbol_layout, legacy_rungs,
+                   pad_split_arrays, pow2_bucket, with_symbol_layout,
+                   work_bucket)
 from .executors import Executor, JnpExecutor, PallasExecutor, make_executor
 from .session import DecoderSession, EngineStats
 
 __all__ = [
-    "ChunkSpec", "DecodePlan", "DeviceStream", "DecoderSession",
-    "EngineStats", "Executor", "JnpExecutor", "LAYOUTS", "PallasExecutor",
-    "chunk_bounds", "chunk_walk_batch", "concat_walk_batches",
-    "derive_symbol_layout", "make_executor", "pad_split_arrays",
-    "pow2_bucket", "with_symbol_layout", "work_bucket",
+    "BucketPolicy", "ChunkSpec", "DecodePlan", "DeviceStream",
+    "DecoderSession", "EngineStats", "Executor", "JnpExecutor", "LAYOUTS",
+    "LEGACY_POLICY", "LadderBucketPolicy", "LegacyBucketPolicy",
+    "PallasExecutor", "chunk_bounds", "chunk_walk_batch",
+    "concat_walk_batches", "derive_symbol_layout", "legacy_rungs",
+    "make_executor", "pad_split_arrays", "pow2_bucket",
+    "with_symbol_layout", "work_bucket",
 ]

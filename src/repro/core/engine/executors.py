@@ -30,9 +30,9 @@ import numpy as np
 
 from ..rans import StaticModel
 from ..vectorized import WalkBatch, _walk_batch_jit, _walk_batch_symbol_jit
-from .plan import (DecodePlan, DeviceStream, SPLIT_FIELDS,
-                   SYMBOL_SPLIT_FIELDS, pad_split_arrays, pow2_bucket,
-                   work_bucket)
+from .plan import (BucketPolicy, DecodePlan, DeviceStream, LEGACY_POLICY,
+                   SPLIT_FIELDS, SYMBOL_SPLIT_FIELDS, pad_split_arrays,
+                   pow2_bucket)
 
 
 class Executor:
@@ -46,18 +46,26 @@ class Executor:
     otherwise; ``"pointer"``/``"symbol"`` force one layout (``"symbol"``
     raises on content registered without an emission log).  The selected
     layout joins the plan key, so the two walks never share executables.
+
+    ``policy`` is the bucket ladder (DESIGN.md §11): every compute-shaped
+    dimension (split rows, scan steps, output slots) is padded through
+    ``policy.work``/``policy.mem`` and ``policy.tag`` joins every plan key,
+    so two ladders can never alias one executable.  Stream *residency*
+    buckets (``upload_stream``) stay on the fixed pow2 ladder — a handle is
+    shared across executors and must not depend on any one policy.
     """
 
     impl: str = "?"
 
     def __init__(self, model: StaticModel, packed_lut: bool, luts: tuple,
-                 layout: str = "auto"):
+                 layout: str = "auto", policy: BucketPolicy | None = None):
         if layout not in ("auto", "pointer", "symbol"):
             raise ValueError(f"unknown layout policy {layout!r}")
         self.model = model
         self.packed_lut = packed_lut
         self.luts = luts
         self.layout = layout
+        self.policy = policy if policy is not None else LEGACY_POLICY
         # Per-layout plan counts (observability; picked up by ServiceStats).
         # plan() may run from any thread (the broker's workers and direct
         # session users), so bumps go through _count_layout's lock.
@@ -117,8 +125,8 @@ class JnpExecutor(Executor):
     impl = "jnp"
 
     def __init__(self, model: StaticModel, packed_lut: bool, luts: tuple,
-                 layout: str = "auto"):
-        super().__init__(model, packed_lut, luts, layout)
+                 layout: str = "auto", policy: BucketPolicy | None = None):
+        super().__init__(model, packed_lut, luts, layout, policy)
         # Cross-impl handle fix: a DeviceStream registered by a backend that
         # skips the full-stream upload (words=None) used to be re-uploaded
         # on EVERY decode.  The upgrade is cached here keyed by handle id,
@@ -161,7 +169,7 @@ class JnpExecutor(Executor):
             return up
 
     def _split_bucket(self, S: int) -> int:
-        return work_bucket(S)
+        return self.policy.work(S)
 
     def plan(self, batch: WalkBatch, ds: DeviceStream,
              n_symbols: int) -> DecodePlan:
@@ -170,8 +178,8 @@ class JnpExecutor(Executor):
         p = self.model.params
         W = batch.ways
         s_b = self._split_bucket(batch.k.shape[0])
-        steps_b = work_bucket(batch.n_steps)
-        out_b = pow2_bucket(n_symbols)
+        steps_b = self.policy.work(batch.n_steps)
+        out_b = self.policy.mem(n_symbols)
         arrs = pad_split_arrays(batch, s_b)
         statics = dict(n_bits=p.n_bits, ways=W, n_steps=steps_b,
                        n_symbols=out_b)
@@ -180,14 +188,15 @@ class JnpExecutor(Executor):
             # The permutation dtype (u16 for small assets, u32 otherwise)
             # joins the key: same sym_bucket, different dtype must not
             # alias one executable.
-            key = (self.impl, layout, self.packed_lut, p.n_bits, W, s_b,
-                   steps_b, ds.sym_bucket, ds.by_symbol.dtype.name, out_b)
+            key = (self.impl, layout, self.policy.tag, self.packed_lut,
+                   p.n_bits, W, s_b, steps_b, ds.sym_bucket,
+                   ds.by_symbol.dtype.name, out_b)
             args = (ds.by_symbol, *self.luts,
                     *(arrs[f] for f in SYMBOL_SPLIT_FIELDS))
         else:
             ds = self.resident(ds)
-            key = (self.impl, layout, self.packed_lut, p.n_bits, W, s_b,
-                   steps_b, ds.bucket, out_b)
+            key = (self.impl, layout, self.policy.tag, self.packed_lut,
+                   p.n_bits, W, s_b, steps_b, ds.bucket, out_b)
             args = (ds.words, *self.luts,
                     *(arrs[f] for f in SPLIT_FIELDS))
         return DecodePlan(key=key, args=args, statics=statics,
@@ -216,8 +225,8 @@ class PallasExecutor(Executor):
 
     def __init__(self, model: StaticModel, packed_lut: bool, luts: tuple, *,
                  interpret: bool = True, rows_per_block: int = 8,
-                 layout: str = "auto"):
-        super().__init__(model, packed_lut, luts, layout)
+                 layout: str = "auto", policy: BucketPolicy | None = None):
+        super().__init__(model, packed_lut, luts, layout, policy)
         self.interpret = interpret
         self.rows_per_block = rows_per_block
         # Lazy host materialization for device-resident (ingested / fused)
@@ -268,9 +277,9 @@ class PallasExecutor(Executor):
         rpb = self.rows_per_block
         packed, per_split, rows, pack, _ = pack_batch(batch)
         rows = pad_to_rows(packed, per_split, rows, pack,
-                           work_bucket(-(-rows // rpb)) * rpb)
-        steps_b = work_bucket(batch.n_steps)
-        out_b = pow2_bucket(n_symbols)
+                           self.policy.work(-(-rows // rpb)) * rpb)
+        steps_b = self.policy.work(batch.n_steps)
+        out_b = self.policy.mem(n_symbols)
         statics = dict(n_bits=p.n_bits, ways=W, n_steps=steps_b,
                        rows_per_block=rpb, interpret=self.interpret,
                        pack=pack, n_symbols=out_b)
@@ -284,15 +293,16 @@ class PallasExecutor(Executor):
                        span=per_split["span"])
             slabs, slab_lo = build_slabs(self._host_by_symbol(ds), win,
                                          rows, pack, rpb)
-            slab_b = pow2_bucket(slabs.shape[1], 8)
+            slab_b = self.policy.mem(slabs.shape[1], 8)
             if slab_b > slabs.shape[1]:
                 slabs = np.pad(slabs, ((0, 0), (0, slab_b - slabs.shape[1])))
             lo_rows = np.repeat(slab_lo, rpb * pack).astype(np.int32)
             sym_rel = per_split["sym_base"] - lo_rows
             sym_rel_packed = np.ascontiguousarray(
                 np.repeat(sym_rel.reshape(-1, pack), W, axis=1))
-            key = (self.impl, layout, self.packed_lut, p.n_bits, W, rows,
-                   steps_b, slab_b, out_b, rpb, self.interpret)
+            key = (self.impl, layout, self.policy.tag, self.packed_lut,
+                   p.n_bits, W, rows, steps_b, slab_b, out_b, rpb,
+                   self.interpret)
             args = (jnp.asarray(slabs), *self.luts,
                     jnp.asarray(packed["k"]), jnp.asarray(packed["y"]),
                     jnp.asarray(packed["x0"]), jnp.asarray(sym_rel_packed),
@@ -307,13 +317,14 @@ class PallasExecutor(Executor):
                               layout=layout)
         host_words = self._host_words(ds)
         slabs, slab_lo = build_slabs(host_words, per_split, rows, pack, rpb)
-        slab_b = pow2_bucket(slabs.shape[1], 8)
+        slab_b = self.policy.mem(slabs.shape[1], 8)
         if slab_b > slabs.shape[1]:
             slabs = np.pad(slabs, ((0, 0), (0, slab_b - slabs.shape[1])))
         lo_rows = np.repeat(slab_lo, rpb).astype(np.int32)
         q0_rel = packed["q0"] - lo_rows[:, None]
-        key = (self.impl, layout, self.packed_lut, p.n_bits, W, rows,
-               steps_b, slab_b, out_b, rpb, self.interpret)
+        key = (self.impl, layout, self.policy.tag, self.packed_lut,
+               p.n_bits, W, rows, steps_b, slab_b, out_b, rpb,
+               self.interpret)
         args = (jnp.asarray(slabs), *self.luts,
                 jnp.asarray(packed["k"]), jnp.asarray(packed["y"]),
                 jnp.asarray(packed["x0"]), jnp.asarray(q0_rel),
@@ -340,14 +351,16 @@ class PallasExecutor(Executor):
 def make_executor(impl: str, model: StaticModel, packed_lut: bool,
                   luts: tuple, *, interpret: bool = True,
                   rows_per_block: int = 8, mesh=None,
-                  layout: str = "auto") -> Executor:
+                  layout: str = "auto",
+                  policy: BucketPolicy | None = None) -> Executor:
     if impl == "jnp":
-        return JnpExecutor(model, packed_lut, luts, layout)
+        return JnpExecutor(model, packed_lut, luts, layout, policy)
     if impl == "pallas":
         return PallasExecutor(model, packed_lut, luts, interpret=interpret,
-                              rows_per_block=rows_per_block, layout=layout)
+                              rows_per_block=rows_per_block, layout=layout,
+                              policy=policy)
     if impl == "sharded":
         from repro.parallel.decode_shard import ShardedExecutor
         return ShardedExecutor(model, packed_lut, luts, mesh=mesh,
-                               layout=layout)
+                               layout=layout, policy=policy)
     raise ValueError(f"unknown impl {impl!r}")

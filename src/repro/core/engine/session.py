@@ -63,11 +63,21 @@ class DecoderSession:
     carry a ``words_by_symbol`` permutation and the classic pointer walk
     otherwise; ``"pointer"``/``"symbol"`` force one layout.  The layout
     joins the executable-cache key, so the walks never share executables.
+
+    ``policy`` is the bucket-ladder policy (DESIGN.md §11): ``None``
+    (default) keeps the legacy pow2/midpoint ladder unless the
+    ``REPRO_TUNING_DB`` environment variable points at a tuning database;
+    ``"tuned"`` resolves the best persisted profile for this backend (env
+    var, then user cache, then the committed CPU defaults); ``"legacy"``
+    forces the hand-picked ladder; a :class:`~repro.core.engine.plan
+    .BucketPolicy` instance is used directly.  ``policy.tag`` joins every
+    executable-cache key, so ladders never alias.
     """
 
     def __init__(self, model: StaticModel, *, impl: str = "jnp",
                  packed_lut: bool | None = None, interpret: bool = True,
-                 rows_per_block: int = 8, mesh=None, layout: str = "auto"):
+                 rows_per_block: int = 8, mesh=None, layout: str = "auto",
+                 policy=None):
         if impl not in ("jnp", "pallas", "sharded"):
             raise ValueError(f"unknown impl {impl!r}")
         from repro.kernels.rans_decode.ops import _luts, packed_lut_ok
@@ -78,11 +88,17 @@ class DecoderSession:
         elif packed_lut and not packed_lut_ok(model):
             raise ValueError("packed LUT requires 8-bit symbols and n <= 12")
         self.packed_lut = packed_lut
+        # Lazy import: tuning sits above plan/executors in the layer order,
+        # so the session resolves policies at construction time only.
+        from ..tuning import resolve_policy
+        self.policy, self.tuning_profile = resolve_policy(
+            policy, impl=impl, layout=layout)
         # Device-resident slot tables, uploaded once.
         self._luts = _luts(model, packed_lut)
         self.executor = make_executor(
             impl, model, packed_lut, self._luts, interpret=interpret,
-            rows_per_block=rows_per_block, mesh=mesh, layout=layout)
+            rows_per_block=rows_per_block, mesh=mesh, layout=layout,
+            policy=self.policy)
         self._exec: dict[tuple, object] = {}
         self._lock = threading.Lock()   # guards _exec + stats (see header)
         self.stats = EngineStats()

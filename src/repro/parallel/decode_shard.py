@@ -55,9 +55,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.engine.executors import JnpExecutor, _check_sym_alignment
-from repro.core.engine.plan import (DecodePlan, SPLIT_FIELDS,
-                                    SYMBOL_SPLIT_FIELDS, pad_split_arrays,
-                                    pow2_bucket, work_bucket)
+from repro.core.engine.plan import (BucketPolicy, DecodePlan, SPLIT_FIELDS,
+                                    SYMBOL_SPLIT_FIELDS, pad_split_arrays)
 from repro.core.vectorized import _walk_batch_impl, _walk_batch_symbol_impl
 
 
@@ -73,8 +72,8 @@ class ShardedExecutor(JnpExecutor):
     impl = "sharded"
 
     def __init__(self, model, packed_lut: bool, luts: tuple, *, mesh=None,
-                 layout: str = "auto"):
-        super().__init__(model, packed_lut, luts, layout)
+                 layout: str = "auto", policy: BucketPolicy | None = None):
+        super().__init__(model, packed_lut, luts, layout, policy)
         if mesh is None:
             from repro.launch.mesh import make_decode_mesh
             mesh = make_decode_mesh()
@@ -121,7 +120,7 @@ class ShardedExecutor(JnpExecutor):
     def _split_bucket(self, S: int) -> int:
         """Equal inert-padded rows per shard: shard count x per-shard work
         bucket, so ragged split counts still divide the mesh evenly."""
-        return self.n_shards * work_bucket(-(-S // self.n_shards))
+        return self.n_shards * self.policy.work(-(-S // self.n_shards))
 
     def plan(self, batch, ds, n_symbols: int) -> DecodePlan:
         layout = self.select_layout(ds)
@@ -130,8 +129,8 @@ class ShardedExecutor(JnpExecutor):
         W = batch.ways
         S = batch.k.shape[0]
         s_b = self._split_bucket(S)
-        steps_b = work_bucket(batch.n_steps)
-        out_b = pow2_bucket(n_symbols)
+        steps_b = self.policy.work(batch.n_steps)
+        out_b = self.policy.mem(n_symbols)
         arrs = pad_split_arrays(batch, s_b)
         rows_per = s_b // self.n_shards
         statics = dict(n_bits=p.n_bits, ways=W, n_steps=steps_b,
@@ -163,7 +162,7 @@ class ShardedExecutor(JnpExecutor):
             lo_s = np.clip(np.minimum(lo_s, hi_s + 1), 0, None)
             lo_s = (lo_s // W) * W                       # whole-group origin
             slab_len = int(np.maximum(hi_s - lo_s + 1, 0).max()) if S else 1
-            slab_b = pow2_bucket(max(slab_len, W), 1024)
+            slab_b = self.policy.mem(max(slab_len, W), 1024)
             gidx = jnp.asarray(lo_s.astype(np.int32))[:, None] \
                 + jnp.arange(slab_b, dtype=jnp.int32)
             slabs = jax.device_put(
@@ -173,9 +172,9 @@ class ShardedExecutor(JnpExecutor):
                 (sym_base - np.repeat(lo_s, rows_per)).astype(np.int32))
             # Permutation dtype joins the key (u16 small-asset variant):
             # slabs inherit it, so u16/u32 must not alias one executable.
-            key = (self.impl, layout, self.n_shards, self.axes,
-                   self.packed_lut, p.n_bits, W, s_b, steps_b, slab_b,
-                   ds.by_symbol.dtype.name, out_b)
+            key = (self.impl, layout, self.policy.tag, self.n_shards,
+                   self.axes, self.packed_lut, p.n_bits, W, s_b, steps_b,
+                   slab_b, ds.by_symbol.dtype.name, out_b)
             args = (slabs, *self.luts,
                     *(jax.device_put(arrs[f], self._rows)
                       for f in SYMBOL_SPLIT_FIELDS))
@@ -200,7 +199,7 @@ class ShardedExecutor(JnpExecutor):
         hi_s = np.where(act, row_hi, np.int64(-1)).max(axis=1)
         lo_s = np.clip(np.minimum(lo_s, hi_s + 1), 0, None)  # empty -> len 0
         slab_len = int(np.maximum(hi_s - lo_s + 1, 0).max()) if S else 1
-        slab_b = pow2_bucket(max(slab_len, 1), 1024)
+        slab_b = self.policy.mem(max(slab_len, 1), 1024)
         gidx = jnp.asarray(lo_s.astype(np.int32))[:, None] \
             + jnp.arange(slab_b, dtype=jnp.int32)
         slabs = jax.device_put(
@@ -208,8 +207,8 @@ class ShardedExecutor(JnpExecutor):
         arrs["q0"] = jnp.asarray(
             (q0 - np.repeat(lo_s, rows_per)).astype(np.int32))
 
-        key = (self.impl, layout, self.n_shards, self.axes, self.packed_lut,
-               p.n_bits, W, s_b, steps_b, slab_b, out_b)
+        key = (self.impl, layout, self.policy.tag, self.n_shards, self.axes,
+               self.packed_lut, p.n_bits, W, s_b, steps_b, slab_b, out_b)
         args = (slabs, *self.luts,
                 *(jax.device_put(arrs[f], self._rows) for f in SPLIT_FIELDS))
         return DecodePlan(key=key, args=args, statics=statics,

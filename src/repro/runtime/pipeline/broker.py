@@ -140,6 +140,16 @@ class PipelineBroker:
                  max_queue: int = 512, max_ingest_queue: int = 64,
                  ingest_coalesce: int = 8, quantize_groups: bool = True):
         self.svc = svc
+        if controller is None and config is None:
+            # A tuned service quantizes to the profile's measured microbatch
+            # sizes, so warm() pre-compiles exactly the shape set dispatch
+            # will request — no warm-miss recompiles under a tuned profile.
+            profile = getattr(svc, "tuning_profile", None)
+            if profile is not None and profile.microbatch_sizes:
+                sizes = tuple(sorted(int(s)
+                                     for s in profile.microbatch_sizes))
+                config = ControllerConfig(max_batch=sizes[-1],
+                                          batch_sizes=sizes)
         self.controller = controller or AdaptiveController(config)
         # Request-level bucketing: a deadline flush of a partial lane (say 3
         # queued) is padded to the next quantized size with ticketless

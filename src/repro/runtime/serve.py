@@ -419,7 +419,13 @@ class DecodeService:
     def _encode_session(self) -> EncoderSession:
         with self._lock:
             if self._encoder is None:
-                self._encoder = EncoderSession(self.session.model)
+                # A service opted into tuning opts its ingest engine in too
+                # (the encoder resolves its OWN profile key — decode
+                # ladders never apply to encode group counts).
+                self._encoder = EncoderSession(
+                    self.session.model,
+                    policy="tuned" if self.session.tuning_profile is not None
+                    else None)
             return self._encoder
 
     # ------------------------------------------------------------------
@@ -727,6 +733,14 @@ class DecodeService:
     @property
     def broker(self):
         return self._broker
+
+    @property
+    def tuning_profile(self):
+        """The tuned :class:`~repro.core.tuning.Profile` the decode session
+        resolved (None = legacy ladder).  The pipeline broker reads the
+        profile's microbatch quantization sizes so the pre-compiled shape
+        set matches what dispatch actually requests."""
+        return self.session.tuning_profile
 
     @property
     def stats(self) -> ServiceStats:

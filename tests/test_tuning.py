@@ -1,0 +1,346 @@
+"""Autotuner + tuning DB + BucketPolicy plumbing (DESIGN.md §11).
+
+Covers the PR's contracts:
+
+  * BucketPolicy laws every ladder must satisfy — coverage (bucket >= n),
+    monotonicity, idempotence, floor respect — checked exhaustively over a
+    dense size range for the legacy policy, tuned ladders, and ladders the
+    breakpoint DP derives;
+  * no cache aliasing: legacy and tuned policies produce distinct plan
+    keys even when their ladders bucket identically (the policy tag joins
+    every executable-cache key), and decode stays bit-exact under both;
+  * tuning DB round-trip (save -> load preserves profiles exactly), loud
+    schema-version mismatch, wildcard key fallback, and the
+    ``resolve_policy`` opt-in chain (None==legacy without the env var);
+  * Autotuner: measured first run persists a profile, second run over the
+    same workload performs ZERO re-measurements (the CI guard), ``force``
+    re-measures;
+  * EncoderSession resumable-tail LRU: bounded, counts evictions, extend
+    refreshes recency;
+  * PipelineBroker derives its microbatch quantization from the tuned
+    profile, so ``warm()`` pre-compiles exactly the dispatch shape set.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import recoil
+from repro.core.engine import DecoderSession
+from repro.core.engine.plan import (LEGACY_POLICY, LadderBucketPolicy,
+                                    LegacyBucketPolicy, legacy_rungs,
+                                    pow2_bucket, work_bucket)
+from repro.core.rans import RansParams, StaticModel
+from repro.core.recoil import build_split_states
+from repro.core.tuning import (Autotuner, Profile, TuningDB,
+                               TuningSchemaError, derive_quantized_sizes,
+                               derive_work_ladder, profile_key,
+                               resolve_policy)
+from repro.core.tuning.tuner import _breakpoint_dp
+from repro.core.vectorized import WalkBatch, encode_interleaved_fast
+
+
+def _model_and_syms(n=40_000, seed=0, ways=32, n_bits=11):
+    rng = np.random.default_rng(seed)
+    syms = np.minimum(rng.exponential(40.0, size=n).astype(np.int64), 255)
+    params = RansParams(n_bits=n_bits, ways=ways)
+    return StaticModel.from_symbols(syms, 256, params), syms
+
+
+def _batch(model, syms, n_splits=8):
+    enc = encode_interleaved_fast(syms, model)
+    plan = recoil.plan_splits(enc, n_splits)
+    return enc, WalkBatch.from_splits(
+        build_split_states(plan, enc.final_states), plan.ways)
+
+
+def _check_policy_laws(policy, sizes):
+    """The BucketPolicy contract: every executor dim relies on these."""
+    prev_w = prev_m = 0
+    for n in sorted(sizes):
+        w, m = policy.work(n), policy.mem(n)
+        assert w >= n and m >= n, (policy.tag, n)           # coverage
+        assert w >= prev_w and m >= prev_m, (policy.tag, n)  # monotone
+        assert policy.work(w) == w, (policy.tag, n)          # idempotent
+        assert policy.mem(m) == m, (policy.tag, n)
+        assert policy.work(1, floor=64) >= 64                # floor
+        prev_w, prev_m = w, m
+
+
+# ----------------------------------------------------------------------
+# Policy laws
+# ----------------------------------------------------------------------
+
+def test_legacy_policy_matches_module_buckets():
+    pol = LegacyBucketPolicy()
+    for n in list(range(1, 600)) + [1023, 1024, 1025, 99_999]:
+        assert pol.work(n) == work_bucket(n)
+        assert pol.mem(n) == pow2_bucket(n)
+    assert pol.tag == "legacy"
+    _check_policy_laws(pol, range(1, 3000))
+
+
+def test_legacy_rungs_are_the_legacy_ladder():
+    rungs = list(legacy_rungs(1, 4096))
+    assert rungs == sorted(set(rungs))                       # strictly sorted
+    for n in range(1, 4097):
+        assert work_bucket(n) in rungs
+
+
+@pytest.mark.parametrize("ladder", [
+    (1, 7, 50, 333, 2048),
+    tuple(legacy_rungs(1, 1024)),
+    (64,),                                   # everything below 64 pads up
+])
+def test_ladder_policy_laws(ladder):
+    pol = LadderBucketPolicy(ladder)
+    _check_policy_laws(pol, range(1, max(ladder) + 500))
+    # In-ladder sizes are exact; above the top rung the fallback covers.
+    for rung in ladder:
+        assert pol.work(rung) == rung
+    big = max(ladder) * 3
+    assert pol.work(big) >= big
+
+
+def test_ladder_tag_digest_distinguishes_ladders():
+    a = LadderBucketPolicy((1, 2, 4))
+    b = LadderBucketPolicy((1, 2, 8))
+    assert a.tag != b.tag and a.tag.startswith("ladder:")
+
+
+# ----------------------------------------------------------------------
+# Breakpoint DP + derivations
+# ----------------------------------------------------------------------
+
+def test_breakpoint_dp_extremes():
+    vals, counts = [10, 20, 40, 80], [5, 5, 5, 5]
+    # Compile dwarfs padding -> one bucket at the max.
+    assert _breakpoint_dp(vals, counts, 1e9, 1e-9) == [80]
+    # Padding dwarfs compile -> every value its own bucket.
+    assert _breakpoint_dp(vals, counts, 1e-9, 1e9) == vals
+    assert _breakpoint_dp([], [], 1.0, 1.0) == []
+
+
+def test_breakpoint_dp_is_optimal_on_small_case():
+    vals, counts = [10, 12, 100], [1, 1, 1]
+    # cost(partition) = #buckets*C + unit*sum(top*hits); C=5, unit=1:
+    #   {10,12,100}: 3*5 + 122 = 137 ; {[10,12],[100]}: 2*5 + 124 = 134
+    #   {[10,12,100]}: 1*5 + 300 = 305
+    assert _breakpoint_dp(vals, counts, 5.0, 1.0) == [12, 100]
+
+
+def test_derived_ladder_satisfies_laws_and_keeps_legacy_floor():
+    sizes = {83: 4, 107: 2, 131: 2, 1500: 1}
+    ladder = derive_work_ladder(sizes, 0.3, 3e-5, horizon=10_000)
+    pol = LadderBucketPolicy(ladder)
+    _check_policy_laws(pol, range(1, 2000))
+    for v in sizes:                       # high horizon: exact rungs kept
+        assert pol.work(v) == v
+    for r in legacy_rungs(1, 1500):       # unobserved dims keep <=1.5x bound
+        assert r in ladder
+
+
+def test_derive_quantized_sizes_contains_max_batch():
+    for C, item in [(0.3, 1e-3), (0.0, 1.0), (10.0, 1e-6)]:
+        sizes = derive_quantized_sizes(C, item, 8)
+        assert sizes == tuple(sorted(set(sizes)))
+        assert sizes[-1] == 8 and all(1 <= s <= 8 for s in sizes)
+
+
+# ----------------------------------------------------------------------
+# No aliasing between policies
+# ----------------------------------------------------------------------
+
+def test_legacy_and_tuned_plans_never_alias_and_stay_bit_exact():
+    model, syms = _model_and_syms()
+    enc, batch = _batch(model, syms)
+    # A tuned ladder that buckets IDENTICALLY to legacy — the adversarial
+    # aliasing case: only the tag keeps the executables apart.
+    twin = Profile(key="cpu:jnp:auto",
+                   work_ladder=tuple(legacy_rungs(1, 1 << 20)))
+    sessions = {
+        "legacy": DecoderSession(model, impl="jnp"),
+        "tuned": DecoderSession(model, impl="jnp", policy=twin),
+    }
+    plans, outs = {}, {}
+    for name, sess in sessions.items():
+        ds = sess.upload_stream(enc.stream)
+        plans[name] = sess.prepare(batch, ds, len(syms))
+        outs[name] = np.asarray(sess.execute(plans[name]))
+        assert sess.stats.compiles == 1
+    assert (outs["legacy"] == syms).all()
+    assert (outs["tuned"] == syms).all()
+    assert plans["legacy"].key != plans["tuned"].key
+    assert "legacy" in plans["legacy"].key
+    assert any(isinstance(p, str) and p.startswith("tuned:")
+               for p in plans["tuned"].key)
+    # Same buckets, different executables — aliasing would have reused.
+    assert plans["legacy"].statics == plans["tuned"].statics
+
+
+def test_tuned_profile_decode_bit_exact_with_sparse_ladder():
+    model, syms = _model_and_syms(n=20_000, seed=3)
+    enc, batch = _batch(model, syms)
+    prof = Profile(key="cpu:jnp:auto",
+                   work_ladder=(1, 3, 9, 100, 4096, 1 << 16))
+    sess = DecoderSession(model, impl="jnp", policy=prof)
+    assert sess.tuning_profile is prof
+    ds = sess.upload_stream(enc.stream)
+    out = np.asarray(sess.decode_batch(batch, ds, len(syms)))
+    assert (out == syms).all()
+
+
+# ----------------------------------------------------------------------
+# Tuning DB
+# ----------------------------------------------------------------------
+
+def _profile(key="cpu:jnp:auto"):
+    return Profile(key=key, work_ladder=(1, 2, 4, 96), mem_ladder=(),
+                   rows_per_block=8, microbatch_sizes=(1, 4, 8),
+                   workload_sig="abc123", measurements=3,
+                   meta={"compile_s": 0.25})
+
+
+def test_tuning_db_round_trip(tmp_path):
+    path = tmp_path / "tuning.json"
+    db = TuningDB()
+    db.put(_profile())
+    db.put(_profile("cpu:*:*"))
+    db.save(path)
+    back = TuningDB.load(path)
+    assert back.profiles == db.profiles           # frozen dataclass equality
+    assert back.get("cpu:jnp:auto") == _profile()
+    # Wildcard fallback chain.
+    assert back.get("cpu:pallas:symbol") == _profile("cpu:*:*")
+    assert back.get("tpu:jnp:auto") is None
+
+
+def test_tuning_db_schema_version_is_loud(tmp_path):
+    path = tmp_path / "tuning.json"
+    path.write_text(json.dumps({"schema": 999, "profiles": {}}))
+    with pytest.raises(TuningSchemaError):
+        TuningDB.load(path)
+    missing = TuningDB.load(tmp_path / "nope.json")
+    assert missing.profiles == {}                 # missing file: empty DB
+
+
+def test_builtin_default_profile_loads_and_obeys_laws():
+    from repro.core.tuning import builtin_db_path
+    db = TuningDB.load(builtin_db_path())
+    prof = db.get(profile_key("cpu", "jnp", "auto"))
+    assert prof is not None and prof.measurements == 0
+    _check_policy_laws(prof.policy(), range(1, 5000))
+
+
+def test_resolve_policy_modes(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_TUNING_DB", raising=False)
+    pol, prof = resolve_policy(None, impl="jnp", layout="auto")
+    assert pol is LEGACY_POLICY and prof is None   # default stays legacy
+    pol, prof = resolve_policy("legacy", impl="jnp", layout="auto")
+    assert pol is LEGACY_POLICY
+    ladder = LadderBucketPolicy((1, 8))
+    assert resolve_policy(ladder, impl="jnp", layout="auto")[0] is ladder
+    p = _profile()
+    pol, prof = resolve_policy(p, impl="jnp", layout="auto")
+    assert prof is p and pol.tag.startswith("tuned:cpu:jnp:auto")
+    with pytest.raises(ValueError):
+        resolve_policy("warp-speed", impl="jnp", layout="auto")
+    # Env DB present: None now opts into the tuned stack.
+    db = TuningDB()
+    db.put(_profile())
+    db.save(tmp_path / "env.json")
+    monkeypatch.setenv("REPRO_TUNING_DB", str(tmp_path / "env.json"))
+    pol, prof = resolve_policy(None, impl="jnp", layout="auto")
+    assert prof == _profile() and pol.tag.startswith("tuned:")
+    # Tuned with no profile anywhere: quiet legacy fallback.
+    monkeypatch.setenv("REPRO_TUNING_DB", str(tmp_path / "empty.json"))
+    monkeypatch.setenv("XDG_CACHE_HOME", str(tmp_path / "cache"))
+    pol, prof = resolve_policy("tuned", impl="jnp", layout="nosuch-layout")
+    assert prof is None or prof.key.endswith(":*")
+
+
+# ----------------------------------------------------------------------
+# Autotuner: measure once, reuse forever
+# ----------------------------------------------------------------------
+
+def test_autotuner_measures_then_reuses_db(tmp_path):
+    db_path = tmp_path / "tuning.json"
+    sizes = [6_000, 9_000]
+    t1 = Autotuner(impl="jnp", repeats=2, max_probes=2, n_splits=4)
+    prof = t1.tune(sizes, db_path=db_path, max_batch=4)
+    assert t1.measurements > 0
+    assert prof.workload_sig and prof.work_ladder
+    _check_policy_laws(prof.policy(), range(1, 2000))
+    assert prof.microbatch_sizes[-1] == 4
+    # Second invocation, same workload: the DB answers, zero probes.
+    t2 = Autotuner(impl="jnp", repeats=2, max_probes=2, n_splits=4)
+    prof2 = t2.tune(sizes, db_path=db_path, max_batch=4)
+    assert t2.measurements == 0
+    assert prof2 == prof
+    # force=True re-measures even on a signature hit.
+    t3 = Autotuner(impl="jnp", repeats=2, max_probes=2, n_splits=4)
+    t3.tune(sizes, db_path=db_path, max_batch=4, force=True)
+    assert t3.measurements > 0
+    # A different workload invalidates the signature.
+    t4 = Autotuner(impl="jnp", repeats=2, max_probes=2, n_splits=4)
+    t4.tune([6_000, 12_000], db_path=db_path, max_batch=4)
+    assert t4.measurements > 0
+
+
+def test_autotuner_observe_is_compile_free():
+    t = Autotuner(impl="jnp", repeats=2, n_splits=4)
+    workload = t.observe([4_000, 8_000])
+    assert t.measurements == 0
+    assert workload.work_sizes and workload.mem_sizes
+    assert workload.signature() == t.observe([4_000, 8_000]).signature()
+    assert workload.signature() != t.observe([4_000]).signature()
+
+
+# ----------------------------------------------------------------------
+# EncoderSession resumable-tail LRU (satellite 2)
+# ----------------------------------------------------------------------
+
+def test_encoder_resume_lru_bounds_and_counts_evictions():
+    from repro.core.encode import EncoderSession
+    model, syms = _model_and_syms(n=12_000, seed=5)
+    sess = EncoderSession(model, resume_capacity=2)
+    for name in ("a", "b", "c"):
+        sess.ingest(syms[:4096], 4, name=name)
+    assert sess.stats.resume_evictions == 1       # "a" fell off
+    assert list(sess._resume) == ["b", "c"]
+    with pytest.raises(KeyError):
+        sess.extend("a", syms[4096:4200])
+    # extend touches recency: "b" becomes most recent, next insert evicts c.
+    sess.extend("b", syms[4096:4200])
+    sess.ingest(syms[:4096], 4, name="d")
+    assert list(sess._resume) == ["b", "d"]
+    assert sess.stats.resume_evictions == 2
+    with pytest.raises(ValueError):
+        EncoderSession(model, resume_capacity=0)
+
+
+# ----------------------------------------------------------------------
+# Broker quantization from the tuned profile (satellite 1)
+# ----------------------------------------------------------------------
+
+def test_broker_derives_quantized_sizes_from_profile():
+    from repro.runtime.serve import DecodeService
+    model, syms = _model_and_syms(n=8_000, seed=7)
+    prof = Profile(key="cpu:jnp:auto",
+                   work_ladder=tuple(legacy_rungs(1, 1 << 16)),
+                   microbatch_sizes=(1, 3, 6))
+    svc = DecodeService(model, policy=prof)
+    assert svc.tuning_profile is prof
+    svc.ingest_batch({"c0": syms}, 4)
+    with svc.start_pipeline() as broker:
+        assert broker.controller.cfg.sizes() == (1, 3, 6)
+        assert broker.controller.cfg.max_batch == 6
+        out = broker.submit("c0", 4).result(timeout=30)
+        assert (np.asarray(out) == syms).all()
+    # An untuned service keeps the default pow2 quantization.
+    svc2 = DecodeService(model)
+    assert svc2.tuning_profile is None
+    svc2.ingest_batch({"c0": syms}, 4)
+    with svc2.start_pipeline() as broker2:
+        assert broker2.controller.cfg.sizes() == (1, 2, 4, 8)
