@@ -14,6 +14,7 @@ Emits CSV to stdout and benchmarks/results/*.csv.  Suites:
     streaming         DESIGN §10   incremental re-ingest + chunked first-chunk latency
     roofline          §Roofline    aggregates dry-run JSONs (if present)
     tuning            DESIGN §11   autotuned vs legacy bucket ladder + DB reuse
+    predictive        DESIGN §12   speculative pre-thinning vs reactive cold path
 
 Also writes ``benchmarks/results/BENCH_summary.json`` — one consolidated
 machine-readable record per run (suite rows + per-suite wall time + the
@@ -31,8 +32,9 @@ import sys
 import time
 
 from . import (bench_combine, bench_compression, bench_encode, bench_engine,
-               bench_partition_sweep, bench_pipeline, bench_roofline,
-               bench_streaming, bench_throughput, bench_tuning)
+               bench_partition_sweep, bench_pipeline, bench_predictive,
+               bench_roofline, bench_streaming, bench_throughput,
+               bench_tuning)
 
 SUITES = {
     "compression": bench_compression.run,
@@ -45,12 +47,14 @@ SUITES = {
     "streaming": bench_streaming.run,
     "roofline": bench_roofline.run,
     "tuning": bench_tuning.run,
+    "predictive": bench_predictive.run,
 }
 
 # Suites that write their own guarded JSON summary; BENCH_summary.json
 # inlines these so CI reads ONE artifact.
 SUITE_SUMMARIES = {
     "tuning": "benchmarks/results/tuning_bench.json",
+    "predictive": "benchmarks/results/predictive.json",
 }
 
 

@@ -144,6 +144,21 @@ class DecoderSession:
             stream = self.upload_stream(stream)
         return self.executor.plan(batch, stream, n_symbols)
 
+    def is_compiled(self, plan: DecodePlan) -> bool:
+        """Whether :meth:`execute` would dispatch a cached executable for
+        this plan (no compile).  Plan-memo surface for speculative warmers
+        (DESIGN.md §12): the predictive pre-thinner probes hot-set group
+        shapes with this and compiles only the missing ones — already-warm
+        shapes cost a dict lookup instead of a redundant dispatch."""
+        with self._lock:
+            return plan.key in self._exec
+
+    @property
+    def executables(self) -> int:
+        """Number of distinct compiled executables resident in the cache."""
+        with self._lock:
+            return len(self._exec)
+
     def execute(self, plan: DecodePlan) -> jax.Array:
         """Run a prepared plan: compile on bucket miss, else reuse."""
         with self._lock:

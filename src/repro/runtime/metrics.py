@@ -8,16 +8,59 @@ dispatch) and one for *service* (dispatch → result ready) time.
 under another's (the ingest-vs-decode overlap ratio the async pipeline
 exists to maximize, DESIGN.md §8); it is exact interval accounting over
 begin/end transitions, not sampling.
+:class:`DecayingCounter` is the popularity instrument behind the predictive
+serving layer (DESIGN.md §12): an exponentially-decayed event counter whose
+value halves every ``half_life_s`` seconds of silence, so "hot" tracks the
+recent request distribution instead of all-time totals.
 """
 
 from __future__ import annotations
 
 import json
+import math
 import os
 import threading
 import time
 
 import numpy as np
+
+
+class DecayingCounter:
+    """Exponentially-decayed event count (half-life semantics).
+
+    ``observe(w)`` adds ``w`` after decaying the stored value by
+    ``0.5 ** (elapsed / half_life_s)``; ``value(now)`` reads the decayed
+    count without mutating state.  A pair observed ``r`` times per second
+    converges to ``r * half_life_s / ln 2`` — heat is proportional to the
+    recent arrival rate, and a pair that goes quiet fades instead of
+    freezing its busy-period count.  Not internally locked: the
+    :class:`~repro.runtime.pipeline.predictor.HeatTracker` that owns a
+    population of these serializes access under its own lock.
+    """
+
+    __slots__ = ("half_life_s", "_value", "_stamp")
+
+    def __init__(self, half_life_s: float = 30.0):
+        if half_life_s <= 0:
+            raise ValueError(f"half_life_s must be positive, got {half_life_s}")
+        self.half_life_s = float(half_life_s)
+        self._value = 0.0
+        self._stamp: float | None = None
+
+    def _decayed(self, now: float) -> float:
+        if self._stamp is None:
+            return 0.0
+        return self._value * math.pow(
+            0.5, max(now - self._stamp, 0.0) / self.half_life_s)
+
+    def observe(self, weight: float = 1.0, now: float | None = None) -> float:
+        now = time.perf_counter() if now is None else now
+        self._value = self._decayed(now) + float(weight)
+        self._stamp = now
+        return self._value
+
+    def value(self, now: float | None = None) -> float:
+        return self._decayed(time.perf_counter() if now is None else now)
 
 
 class LatencyWindow:

@@ -2,18 +2,22 @@
 
 ``DecodeService.start_pipeline()`` attaches a :class:`PipelineBroker`
 (worker threads overlapping ingest with decode, capability lanes, adaptive
-microbatching, admission control) and turns the service into a thin façade
-— see DESIGN.md §8 and the module docstrings here:
+microbatching, admission control, predictive hot-set speculation) and turns
+the service into a thin façade — see DESIGN.md §8, §12 and the module
+docstrings here:
 
   * :mod:`.broker`     — request broker, worker threads, backpressure
   * :mod:`.controller` — EMA arrival/service estimators -> flush decisions
+                         + deadline classes
   * :mod:`.capability` — per-client parallelism + downscaled plan/container
+  * :mod:`.predictor`  — popularity-decayed heat + speculative pre-thinning
 """
 
 from .broker import (BrokerSaturated, PipelineBroker, PipelineTicket,
                      TicketCancelled)
 from .capability import CapabilityRegistry, ClientCapability
 from .controller import AdaptiveController, ControllerConfig, FlushDecision
+from .predictor import HeatTracker, SpeculativePrethinner
 
 __all__ = [
     "AdaptiveController",
@@ -22,7 +26,9 @@ __all__ = [
     "ClientCapability",
     "ControllerConfig",
     "FlushDecision",
+    "HeatTracker",
     "PipelineBroker",
     "PipelineTicket",
+    "SpeculativePrethinner",
     "TicketCancelled",
 ]

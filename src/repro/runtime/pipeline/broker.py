@@ -22,9 +22,25 @@ engine tiers (DESIGN.md §8):
     :class:`~repro.runtime.pipeline.controller.AdaptiveController` decides
     per tick, from EMA arrival-rate and service-time estimates, how large a
     group to form and how long a partial group may wait.
-  * **Admission control** — a bounded total queue; a saturated broker
-    rejects with :class:`BrokerSaturated` (backpressure the load generator
-    can see) instead of queueing unboundedly.
+  * **Admission control** — a bounded total queue AND a per-lane depth
+    bound; a saturated broker rejects with :class:`BrokerSaturated`
+    carrying a ``retry_after_s`` hint derived from the controller's EMA
+    service times (how long the rejected lane needs to drain), instead of
+    queueing unboundedly.
+  * **Deadline-aware flush** — each decode ticket carries a deadline class
+    (``interactive``/``standard``/``bulk``, controller.py); a lane
+    dispatches a partial group as soon as its most urgent ticket's budget
+    nears exhaustion, so bulk traffic accumulates into larger groups while
+    interactive requests flush early (DESIGN.md §12).
+  * **Predictive hot-set serving** — broker traffic feeds a popularity
+    -decayed :class:`~repro.runtime.pipeline.predictor.HeatTracker`; the
+    ingest worker's idle gaps run one
+    :class:`~repro.runtime.pipeline.predictor.SpeculativePrethinner` unit
+    each (pre-derived thinned plans/containers/permutation slices + pre
+    -compiled fused shapes for the hot set), so the first real request for
+    hot content is a memo hit + cached-executable dispatch.  Speculation
+    never blocks decode dispatch (separate thread) and yields to queued
+    ingest work after at most one unit.
   * **Ingest coalescing** — queued ingest events for distinct contents fuse
     into ONE vmapped ``ingest_batch`` dispatch (per-event ``n_splits``
     preserved); repeats of one name stay ordered across batches.
@@ -50,11 +66,19 @@ from repro.runtime.serve import DecodeTicket, StreamTicket
 
 from .capability import CapabilityRegistry
 from .controller import AdaptiveController, ControllerConfig
+from .predictor import HeatTracker, SpeculativePrethinner
 
 
 class BrokerSaturated(RuntimeError):
-    """Admission rejection: the broker's queue bound is reached.  Callers
-    back off (or surface 429-style pushback); nothing was enqueued."""
+    """Admission rejection: a queue bound (total or per-lane) is reached.
+    Callers back off (or surface 429-style pushback); nothing was enqueued.
+    ``retry_after_s`` is the broker's drain estimate for the rejected
+    queue — EMA service time x the group count needed to clear it — the
+    number a 429/Retry-After header would carry."""
+
+    def __init__(self, msg: str, retry_after_s: float | None = None):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
 
 
 class TicketCancelled(RuntimeError):
@@ -70,10 +94,16 @@ class PipelineTicket(DecodeTicket):
     the worker builds its dispatch group (they never reach the engine), and
     a cancel that races an in-flight dispatch discards the delivered result
     — ``result()`` raises :class:`TicketCancelled` either way.
+
+    Decode tickets carry their deadline (DESIGN.md §12): ``deadline_at`` is
+    when the resolved class budget exhausts, ``flush_at`` the earlier point
+    (margin subtracted) at which the lane scheduler force-dispatches a
+    partial group rather than let the ticket breach.
     """
 
     __slots__ = ("_event", "_mutex", "_cancelled", "kind", "submitted_at",
-                 "dispatched_at", "completed_at")
+                 "dispatched_at", "completed_at", "deadline_class",
+                 "deadline_at", "flush_at")
 
     def __init__(self, svc, kind: str = "decode"):
         super().__init__(svc)
@@ -84,6 +114,9 @@ class PipelineTicket(DecodeTicket):
         self.submitted_at = time.perf_counter()
         self.dispatched_at = None
         self.completed_at = None
+        self.deadline_class = None
+        self.deadline_at = None
+        self.flush_at = None
 
     def _fulfill(self, out=None, err=None) -> None:
         with self._mutex:
@@ -138,7 +171,12 @@ class PipelineBroker:
     def __init__(self, svc, *, controller: AdaptiveController | None = None,
                  config: ControllerConfig | None = None,
                  max_queue: int = 512, max_ingest_queue: int = 64,
-                 ingest_coalesce: int = 8, quantize_groups: bool = True):
+                 ingest_coalesce: int = 8, quantize_groups: bool = True,
+                 max_lane_depth: int | None = None, predictive: bool = True,
+                 heat_half_life_s: float = 30.0, speculate_top_k: int = 16,
+                 speculative_capacity: int | None = None,
+                 min_heat: float = 0.25,
+                 registry_max_entries: int | None = None):
         self.svc = svc
         if controller is None and config is None:
             # A tuned service quantizes to the profile's measured microbatch
@@ -159,10 +197,24 @@ class PipelineBroker:
         # lifted to whole requests).  Waste is bounded by one quantization
         # step and only paid on partial flushes.
         self.quantize_groups = bool(quantize_groups)
-        self.registry = CapabilityRegistry(svc)
         self.max_queue = int(max_queue)
+        # Per-lane admission: one slow lane can no longer absorb the whole
+        # global bound and starve the others of queue room.
+        self.max_lane_depth = (int(max_lane_depth)
+                               if max_lane_depth is not None
+                               else self.max_queue)
         self.max_ingest_queue = int(max_ingest_queue)
         self.ingest_coalesce = int(ingest_coalesce)
+        # Predictive hot-set serving (DESIGN.md §12): traffic heats the
+        # tracker; the ingest worker's idle gaps run the pre-thinner.  The
+        # tracker also ranks the registry's budget eviction (cold first).
+        self.tracker = HeatTracker(half_life_s=heat_half_life_s)
+        self.registry = CapabilityRegistry(
+            svc, max_entries=registry_max_entries, tracker=self.tracker)
+        self.prethinner = (SpeculativePrethinner(
+            svc, self.registry, self.controller, self.tracker,
+            top_k=speculate_top_k, min_heat=min_heat,
+            capacity=speculative_capacity) if predictive else None)
 
         self._cv = threading.Condition()
         self._lanes: dict[int, deque] = {}
@@ -203,25 +255,71 @@ class PipelineBroker:
     # Client API
     # ------------------------------------------------------------------
 
-    def submit(self, name: str, n_threads: int) -> PipelineTicket:
-        """Queue a decode on the ``n_threads`` capability lane."""
+    def _retry_after_s(self, depth: int) -> float:
+        """Drain estimate for a queue of ``depth`` requests: full-size
+        groups at the controller's EMA service time for that size."""
+        b = self.controller.cfg.max_batch
+        groups = max((depth + b - 1) // b, 1)
+        return groups * self.controller.service_s(b)
+
+    def submit(self, name: str, n_threads: int,
+               deadline=None) -> PipelineTicket:
+        """Queue a decode on the ``n_threads`` capability lane.
+
+        ``deadline`` is a deadline class name (``interactive`` /
+        ``standard`` / ``bulk`` by default) or an explicit budget in ms;
+        None takes the controller's default class.  The lane dispatches a
+        partial group rather than let the ticket's budget exhaust.  The
+        submission also heats the (content, capability) pair in the
+        predictive tracker."""
         if self.svc.generation(name) == 0:
             raise KeyError(f"content {name!r} is not registered")
+        cls, budget_ms = self.controller.budget_ms(deadline)
+        lane = int(n_threads)
+        self.tracker.observe(name, lane)
         ticket = PipelineTicket(self.svc, kind="decode")
+        ticket.deadline_class = cls
+        ticket.deadline_at = ticket.submitted_at + budget_ms * 1e-3
+        margin_ms = min(self.controller.cfg.deadline_margin_ms,
+                        0.2 * budget_ms)
+        ticket.flush_at = ticket.deadline_at - margin_ms * 1e-3
         with self._cv:
             if self._closing:
                 raise RuntimeError("broker is closed")
             if self._queued + self._inflight >= self.max_queue:
                 self.rejected += 1
                 raise BrokerSaturated(
-                    f"decode queue at bound {self.max_queue}")
-            lane = int(n_threads)
-            self._lanes.setdefault(lane, deque()).append((ticket, name))
+                    f"decode queue at bound {self.max_queue}",
+                    retry_after_s=self._retry_after_s(self._queued))
+            lane_q = self._lanes.setdefault(lane, deque())
+            if len(lane_q) >= self.max_lane_depth:
+                self.rejected += 1
+                raise BrokerSaturated(
+                    f"lane {lane} at depth bound {self.max_lane_depth}",
+                    retry_after_s=self._retry_after_s(len(lane_q)))
+            lane_q.append((ticket, name))
             self._queued += 1
             self.submitted += 1
             self.controller.observe_arrival(lane, ticket.submitted_at)
             self._cv.notify_all()
         return ticket
+
+    def anticipate(self, name: str, n_threads: int,
+                   weight: float = 1.0) -> None:
+        """Declare expected popularity for a (content, capability) pair
+        without submitting a request — same decayed counter real traffic
+        feeds, synthetic weight.  Operators use this to pre-heat a launch's
+        hot set; the next idle gaps (or :meth:`speculate`) pre-derive it."""
+        self.tracker.observe(name, int(n_threads), weight)
+
+    def speculate(self) -> int:
+        """Drive the speculative pre-thinner to empty from the caller's
+        thread (blocking): every due hot-set pair derived, every implied
+        missing fused shape compiled.  Returns units run; 0 when the hot
+        set is already covered (or prediction is disabled).  The idle-gap
+        path does the same work incrementally — this is for deterministic
+        pre-warming after :meth:`anticipate` and for benchmarks."""
+        return 0 if self.prethinner is None else self.prethinner.speculate()
 
     def submit_ingest(self, name: str, symbols, n_splits: int) -> PipelineTicket:
         """Queue an ingest (encode + split-plan + register) for the ingest
@@ -234,11 +332,20 @@ class PipelineBroker:
                     >= self.max_ingest_queue:
                 self.rejected += 1
                 raise BrokerSaturated(
-                    f"ingest queue at bound {self.max_ingest_queue}")
+                    f"ingest queue at bound {self.max_ingest_queue}",
+                    retry_after_s=self._ingest_retry_after_s())
             self._ingest_q.append((ticket, name, symbols, int(n_splits)))
             self.ingest_events += 1
             self._cv.notify_all()
         return ticket
+
+    def _ingest_retry_after_s(self) -> float | None:
+        """Drain hint for a saturated ingest queue (measured mean ingest
+        service time x queued events; None before any observation)."""
+        mean_ms = self.ingest_window.summary_ms()["mean_ms"]
+        if mean_ms <= 0:
+            return None
+        return (len(self._ingest_q) + self._ingest_inflight) * mean_ms * 1e-3
 
     def submit_extend(self, name: str, delta) -> PipelineTicket:
         """Queue an incremental re-ingest (``DecodeService.extend``): the
@@ -256,7 +363,8 @@ class PipelineBroker:
                     >= self.max_ingest_queue:
                 self.rejected += 1
                 raise BrokerSaturated(
-                    f"ingest queue at bound {self.max_ingest_queue}")
+                    f"ingest queue at bound {self.max_ingest_queue}",
+                    retry_after_s=self._ingest_retry_after_s())
             self._ingest_q.append((ticket, name, delta, 0))
             self.ingest_events += 1
             self.extend_events += 1
@@ -280,7 +388,8 @@ class PipelineBroker:
             if self._queued + self._inflight >= self.max_queue:
                 self.rejected += 1
                 raise BrokerSaturated(
-                    f"decode queue at bound {self.max_queue}")
+                    f"decode queue at bound {self.max_queue}",
+                    retry_after_s=self._retry_after_s(self._queued))
             self._stream_q.append((ticket, name, int(n_threads),
                                    int(n_chunks)))
             self._queued += 1
@@ -353,7 +462,10 @@ class PipelineBroker:
     def _pick_lane(self, now: float):
         """Under ``_cv``: the dispatchable lane with the oldest head
         request (fairness), or (None, wait_ms) when every lane should keep
-        accumulating."""
+        accumulating.  Deadline-aware: each lane's flush slack is the
+        minimum remaining margin-adjusted budget over its queued tickets
+        (NOT just the head's — an interactive ticket queued behind bulk
+        ones must still flush the lane in time)."""
         best, best_take, best_age = None, 0, -1.0
         min_wait = None
         for lane, q in self._lanes.items():
@@ -361,7 +473,10 @@ class PipelineBroker:
                 continue
             oldest = q[0][0].submitted_at
             age_ms = (now - oldest) * 1e3
-            decision = self.controller.decide(lane, len(q), age_ms, now)
+            slack_ms = min(
+                (t.flush_at - now) * 1e3 for t, _ in q)
+            decision = self.controller.decide(lane, len(q), age_ms, now,
+                                              flush_slack_ms=slack_ms)
             if decision.dispatch:
                 if age_ms > best_age:
                     best, best_take, best_age = lane, decision.batch, age_ms
@@ -487,14 +602,27 @@ class PipelineBroker:
 
     def _ingest_worker(self) -> None:
         while True:
+            batch = None
             with self._cv:
                 if not self._ingest_q:
                     if self._closing:
                         break
-                    self._cv.wait(timeout=0.05)
+                else:
+                    batch = self._pop_ingest_batch()
+                    self._ingest_inflight += len(batch)
+            if batch is None:
+                # Idle gap: at most ONE speculative unit (pre-thin a hot
+                # pair or warm a missing fused shape), run OUTSIDE the
+                # queue lock — the prethinner takes the service lock, and
+                # §8's audit forbids holding both.  Queued ingest work
+                # arriving mid-unit waits at most that unit; decode
+                # dispatch is never blocked (separate worker thread).
+                if self.prethinner is not None and self.prethinner.step():
                     continue
-                batch = self._pop_ingest_batch()
-                self._ingest_inflight += len(batch)
+                with self._cv:
+                    if not self._ingest_q and not self._closing:
+                        self._cv.wait(timeout=0.05)
+                continue
             # Same drop point as decode: cancelled ingests never encode.
             live = [ev for ev in batch if not ev[0].cancelled]
             if len(live) < len(batch):
@@ -550,6 +678,17 @@ class PipelineBroker:
             "queue_depth": depth,
             "ingest_queue_depth": ingest_depth,
             "lanes": lanes,
+            "admission": {
+                "max_queue": self.max_queue,
+                "max_lane_depth": self.max_lane_depth,
+                "lane_depths": dict(lanes),
+                "retry_after_s": {
+                    lane: round(self._retry_after_s(d), 4)
+                    for lane, d in lanes.items()},
+            },
+            "heat": self.tracker.snapshot(),
+            "predictive": (None if self.prethinner is None
+                           else self.prethinner.snapshot()),
             "submitted": self.submitted,
             "completed": self.completed,
             "rejected": self.rejected,

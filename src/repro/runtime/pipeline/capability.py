@@ -22,6 +22,24 @@ call; the registry moves that to a per-client declaration:
 Invalidation is by content *generation* (``DecodeService.generation`` bumps
 on every re-registration), so the registry never serves a stale thinning
 after an ingest refresh and needs no callback channel from the service.
+Generation and content bytes are read in ONE service-lock hold
+(``DecodeService.content_snapshot``) — the earlier two-step read could
+interleave with a concurrent ``extend()`` and tag a memo entry with a
+generation that does not match its bytes (regression-tested under a
+threaded extend storm in ``tests/test_predictive.py``).
+
+Two predictive-serving surfaces ride on top (DESIGN.md §12):
+
+  * ``prethin(name, n_threads)`` — derive both memo entries for a
+    (content, capability) pair *speculatively*, off the request path.
+    Entries derived this way are flagged; the first real request that
+    lands on one counts a ``speculative_hit`` (the hit-rate the CI guard
+    watches).
+  * an optional ``max_entries`` budget with popularity-ranked eviction:
+    when a heat tracker is attached, the coldest (name, n_threads) pair is
+    evicted first; without one, insertion order stands in.  Evicted pairs
+    re-derive bit-exactly on their next touch — the memos are a cache, not
+    the source of truth.
 """
 
 from __future__ import annotations
@@ -45,19 +63,27 @@ class ClientCapability:
 class CapabilityRegistry:
     """Client capability declarations + generation-memoized downscaling."""
 
-    def __init__(self, svc):
+    def __init__(self, svc, *, max_entries: int | None = None, tracker=None):
         self._svc = svc
         self._clients: dict[str, ClientCapability] = {}
-        # (name, n_threads) -> (generation, thinned plan / packed bytes).
+        # (name, n_threads) -> (generation, value, speculative_flag).
         # The generation is stored IN the value, not the key, so a content
         # refresh overwrites the entry instead of leaking one plan + one
         # full wire payload per (generation, capability) forever — the
-        # memos are bounded by #contents x #distinct capabilities.
-        self._plan_memo: dict[tuple, tuple[int, RecoilPlan]] = {}
-        self._container_memo: dict[tuple, tuple[int, bytes]] = {}
+        # memos are bounded by #contents x #distinct capabilities, and
+        # optionally by ``max_entries`` (heat-ranked eviction, see header).
+        self._plan_memo: dict[tuple, tuple] = {}
+        self._container_memo: dict[tuple, tuple] = {}
         self._lock = threading.Lock()
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = max_entries
+        self._tracker = tracker   # HeatTracker (predictor.py) or None
         self.memo_hits = 0
         self.memo_misses = 0
+        self.speculative_hits = 0
+        self.prethins = 0
+        self.evictions = 0
 
     # ------------------------------------------------------------------
     # Declarations
@@ -87,54 +113,71 @@ class CapabilityRegistry:
         with self._lock:
             return dict(self._clients)
 
+    def attach_tracker(self, tracker) -> None:
+        """Wire in the broker's heat tracker so budget eviction ranks by
+        popularity instead of insertion order."""
+        with self._lock:
+            self._tracker = tracker
+
     # ------------------------------------------------------------------
     # Downscaled serving
     # ------------------------------------------------------------------
 
-    def _generation(self, name: str) -> int:
-        """Current content generation.  Callers read this BEFORE taking the
-        content snapshot: if a refresh lands in between, the memo entry is
-        tagged with the OLD generation and the next lookup treats it as a
-        miss (self-healing) — the reverse order could tag fresh-generation
-        keys with stale bytes."""
-        gen = self._svc.generation(name)
-        if gen == 0:
-            raise KeyError(f"content {name!r} is not registered")
-        return gen
-
     def _lookup(self, memo: dict, key: tuple, gen: int):
         """Under ``_lock``: the memoized value iff it matches the content's
-        CURRENT generation (a stale entry is a miss and gets overwritten)."""
+        CURRENT generation (a stale entry is a miss and gets overwritten).
+        A hit on a speculatively-derived entry counts ``speculative_hits``
+        — the pre-thinner did this request's derivation off the request
+        path."""
         with self._lock:
             hit = memo.get(key)
             if hit is not None and hit[0] == gen:
                 self.memo_hits += 1
+                if hit[2]:
+                    self.speculative_hits += 1
                 return hit[1]
             self.memo_misses += 1
             return None
 
-    def plan_for(self, name: str, client_id: str) -> RecoilPlan:
-        """The content's split metadata thinned to the client's declared
-        parallelism (paper §3.3: pure entry deletion, no bitstream touch)."""
-        key = (name, self.n_threads(client_id))
-        gen = self._generation(name)
+    def _store(self, memo: dict, key: tuple, gen: int, value,
+               speculative: bool) -> None:
+        with self._lock:
+            memo[key] = (gen, value, speculative)
+            if self.max_entries is None:
+                return
+            while len(memo) > self.max_entries:
+                victim = self._coldest(memo)
+                del memo[victim]
+                self.evictions += 1
+
+    def _coldest(self, memo: dict):
+        """Eviction victim under the entry budget: the lowest-heat
+        (name, n_threads) pair when a tracker is attached (popularity decay
+        evicts cold pairs first), else the oldest-inserted.  The
+        just-inserted key IS a candidate — a cold pair's derivation is
+        returned to its caller but does not displace a hotter resident."""
+        if self._tracker is None:
+            return next(iter(memo))
+        return min(memo, key=lambda k: (self._tracker.heat(k[0], k[1]), k))
+
+    def _plan(self, name: str, n_threads: int,
+              speculative: bool = False) -> RecoilPlan:
+        key = (name, int(n_threads))
+        gen, c = self._svc.content_snapshot(name)
         hit = self._lookup(self._plan_memo, key, gen)
         if hit is not None:
             return hit
-        plan = combine_plan(self._svc.content(name).plan, key[1])
-        with self._lock:
-            self._plan_memo[key] = (gen, plan)
+        plan = combine_plan(c.plan, key[1])
+        self._store(self._plan_memo, key, gen, plan, speculative)
         return plan
 
-    def container_for(self, name: str, client_id: str) -> bytes:
-        """The client-sized on-wire payload: identical bitstream bytes,
-        §4.3 metadata thinned to the declared capability."""
-        key = (name, self.n_threads(client_id))
-        gen = self._generation(name)
+    def _container(self, name: str, n_threads: int,
+                   speculative: bool = False) -> bytes:
+        key = (name, int(n_threads))
+        gen, c = self._svc.content_snapshot(name)
         hit = self._lookup(self._container_memo, key, gen)
         if hit is not None:
             return hit
-        c = self._svc.content(name)
         plan = combine_plan(c.plan, key[1])
         ds = c.stream
         words = (ds.host if ds.host is not None
@@ -150,9 +193,51 @@ class CapabilityRegistry:
             k_of_word=np.zeros(ds.n_words, np.int64),
             y_of_word=np.zeros(ds.n_words, np.uint32))
         buf = container.pack_recoil(enc, self._svc.session.model, plan)
-        with self._lock:
-            self._container_memo[key] = (gen, buf)
+        self._store(self._container_memo, key, gen, buf, speculative)
         return buf
+
+    def plan_for(self, name: str, client_id: str) -> RecoilPlan:
+        """The content's split metadata thinned to the client's declared
+        parallelism (paper §3.3: pure entry deletion, no bitstream touch)."""
+        return self._plan(name, self.n_threads(client_id))
+
+    def container_for(self, name: str, client_id: str) -> bytes:
+        """The client-sized on-wire payload: identical bitstream bytes,
+        §4.3 metadata thinned to the declared capability."""
+        return self._container(name, self.n_threads(client_id))
+
+    def plan_for_threads(self, name: str, n_threads: int) -> RecoilPlan:
+        """Capability-keyed variant of :meth:`plan_for` (no client
+        declaration needed — the broker's lanes and the pre-thinner work in
+        capabilities, not client ids)."""
+        return self._plan(name, n_threads)
+
+    def container_for_threads(self, name: str, n_threads: int) -> bytes:
+        """Capability-keyed variant of :meth:`container_for`."""
+        return self._container(name, n_threads)
+
+    def prethin(self, name: str, n_threads: int) -> None:
+        """Speculatively derive the thinned plan AND the on-wire container
+        for one (content, capability) pair (DESIGN.md §12).  Runs in the
+        broker's idle gaps; entries land flagged so the first real request
+        that hits one is counted in ``speculative_hits``.  Already-current
+        entries are left alone (idempotent)."""
+        self.prethins += 1
+        self._plan(name, n_threads, speculative=True)
+        self._container(name, n_threads, speculative=True)
+
+    def evict(self, name: str, n_threads: int) -> bool:
+        """Drop both memo entries for one pair (predictive-cache eviction);
+        returns whether anything was dropped.  The pair re-derives
+        bit-exactly on its next touch."""
+        key = (name, int(n_threads))
+        with self._lock:
+            dropped = self._plan_memo.pop(key, None) is not None
+            if self._container_memo.pop(key, None) is not None:
+                dropped = True
+            if dropped:
+                self.evictions += 1
+        return dropped
 
     def layout_for(self, name: str) -> str:
         """The decode layout the content serves under — negotiated like a
@@ -164,10 +249,13 @@ class CapabilityRegistry:
         ``words_by_symbol`` serves every declared ``n_threads``."""
         return self._svc.layout_for(name)
 
-    def submit_for(self, name: str, client_id: str):
+    def submit_for(self, name: str, client_id: str, deadline=None):
         """Decode ticket at the client's declared capability (broker lanes
-        when the pipeline is running, sync microbatching otherwise)."""
-        return self._svc.submit(name, self.n_threads(client_id))
+        when the pipeline is running, sync microbatching otherwise).
+        ``deadline`` is a deadline class name or explicit ms budget
+        (controller.py)."""
+        return self._svc.submit(name, self.n_threads(client_id),
+                                deadline=deadline)
 
     def decode_for(self, name: str, client_id: str):
         """Immediate decode at the client's declared capability."""
@@ -180,6 +268,10 @@ class CapabilityRegistry:
                             for c in self._clients.values()},
                 "memo_hits": self.memo_hits,
                 "memo_misses": self.memo_misses,
+                "speculative_hits": self.speculative_hits,
+                "prethins": self.prethins,
+                "evictions": self.evictions,
+                "max_entries": self.max_entries,
                 "plans_cached": len(self._plan_memo),
                 "containers_cached": len(self._container_memo),
             }

@@ -28,6 +28,17 @@ buckets under load.  Quantized sizes (x uniform-capability lanes, see
 ``broker.py``) give a small closed set of group shapes that warmup can
 enumerate — the bench's 0-recompile guard relies on it.
 
+**Deadline classes** (DESIGN.md §12) refine the flat ``target_delay_ms``
+floor: each decode ticket carries a latency *budget* resolved from its
+class (``interactive`` / ``standard`` / ``bulk`` by default, overridable
+via ``deadline_classes``), and a lane dispatches a partial group as soon
+as the most urgent queued ticket's budget nears exhaustion
+(``deadline_margin_ms`` before ``deadline_at``).  Bulk lanes therefore
+accumulate past the old flat floor into larger, cheaper groups while
+interactive tickets still flush in time — the broker feeds ``decide`` the
+lane's minimum remaining slack and the old ``oldest_wait_ms`` path remains
+for callers without deadlines.
+
 The controller is pure bookkeeping — no threads, no jax — so it is unit
 testable with synthetic clocks (``tests/test_pipeline.py``).
 """
@@ -44,6 +55,11 @@ class ControllerConfig:
     target_delay_ms: float = 25.0    # latency floor: oldest wait forces flush
     ema_alpha: float = 0.25          # arrival/service estimator gain
     default_service_ms: float = 5.0  # prior before the first observation
+    # ((class_name, budget_ms), ...); () -> interactive/standard/bulk
+    # derived from target_delay_ms (standard == the legacy flat floor).
+    deadline_classes: tuple = ()
+    default_class: str = "standard"
+    deadline_margin_ms: float = 5.0  # dispatch this early vs. the deadline
 
     def sizes(self) -> tuple:
         if self.batch_sizes:
@@ -54,6 +70,16 @@ class ControllerConfig:
             b *= 2
         out.append(self.max_batch)
         return tuple(sorted(set(out)))
+
+    def classes(self) -> dict:
+        """Deadline-class budgets in ms.  ``standard`` keeps the legacy
+        flat-floor behavior; ``interactive`` flushes 4x sooner; ``bulk``
+        may wait 8x longer and so forms larger (cheaper) groups."""
+        if self.deadline_classes:
+            return dict(self.deadline_classes)
+        t = self.target_delay_ms
+        return {"interactive": max(t / 4.0, 1.0), "standard": t,
+                "bulk": t * 8.0}
 
 
 @dataclasses.dataclass
@@ -136,14 +162,50 @@ class AdaptiveController:
                 return b
         return self._sizes[-1]
 
+    def budget_ms(self, deadline=None) -> tuple[str, float]:
+        """Resolve a submit-time deadline into ``(class_name, budget_ms)``.
+
+        ``deadline`` may be None (the config's default class), a class name
+        from :meth:`ControllerConfig.classes`, or an explicit budget in ms.
+        Unknown class names raise loudly — a typo'd class silently falling
+        back to ``standard`` would be an SLO bug, not a convenience.
+        """
+        classes = self.cfg.classes()
+        if deadline is None:
+            deadline = self.cfg.default_class
+        if isinstance(deadline, str):
+            if deadline not in classes:
+                raise KeyError(
+                    f"unknown deadline class {deadline!r}; "
+                    f"configured: {sorted(classes)}")
+            return deadline, float(classes[deadline])
+        budget = float(deadline)
+        if budget <= 0:
+            raise ValueError(f"deadline budget must be positive, got {budget}")
+        return "custom", budget
+
     def decide(self, lane, queued: int, oldest_wait_ms: float,
-               now: float) -> FlushDecision:
-        """Flush policy for one lane (see module docstring)."""
+               now: float, flush_slack_ms: float | None = None
+               ) -> FlushDecision:
+        """Flush policy for one lane (see module docstring).
+
+        ``flush_slack_ms`` is the lane's minimum remaining slack before a
+        queued ticket's deadline (margin already subtracted by the broker at
+        submit time).  When provided it REPLACES the flat ``target_delay_ms``
+        floor: the lane dispatches a partial group once slack runs out,
+        which lets bulk tickets accumulate past the flat floor and forces
+        interactive tickets out early.  Callers without deadlines (``None``)
+        keep the legacy oldest-wait behavior.
+        """
         if queued <= 0:
             return FlushDecision(False, 0, self.cfg.target_delay_ms)
         target = self.target_batch(lane, now)
         if queued >= target or queued >= self.cfg.max_batch:
             return FlushDecision(True, min(queued, self.cfg.max_batch), 0.0)
+        if flush_slack_ms is not None:
+            if flush_slack_ms <= 0.0:
+                return FlushDecision(True, queued, 0.0)
+            return FlushDecision(False, target, flush_slack_ms)
         if oldest_wait_ms >= self.cfg.target_delay_ms:
             return FlushDecision(True, queued, 0.0)
         return FlushDecision(
@@ -157,4 +219,6 @@ class AdaptiveController:
             "service_ms": {
                 b: round(s * 1e3, 3) for b, s in self._service_s.items()},
             "batch_sizes": list(self._sizes),
+            "deadline_classes": {
+                k: round(v, 3) for k, v in self.cfg.classes().items()},
         }

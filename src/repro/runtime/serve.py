@@ -360,6 +360,22 @@ class DecodeService:
         with self._lock:
             return self._contents[name]
 
+    def content_snapshot(self, name: str) -> tuple[int, _Content]:
+        """``(generation, content)`` read atomically under the service lock.
+
+        The capability registry's original two-step read — ``generation()``
+        then ``content()`` — could interleave with a concurrent ``extend()``
+        re-registration and pair the OLD generation tag with the NEW bytes
+        (or vice versa), poisoning a memo entry until the next bump.  One
+        lock hold makes the pair consistent by construction; derivations
+        tagged with this generation are guaranteed to be of these bytes.
+        Raises ``KeyError`` for unregistered names."""
+        with self._lock:
+            gen = self._generations.get(name, 0)
+            if gen == 0:
+                raise KeyError(f"content {name!r} is not registered")
+            return gen, self._contents[name]
+
     # ------------------------------------------------------------------
     # Ingest (encode engine -> registration, stream stays on device)
     # ------------------------------------------------------------------
@@ -455,9 +471,15 @@ class DecodeService:
     # Immediate path
     # ------------------------------------------------------------------
 
-    def decode(self, name: str, n_threads: int) -> jax.Array:
-        """Decode registered content at the client's parallelism; returns a
-        device int32 symbol array (no host round-trip)."""
+    def prepare_request(self, name: str, n_threads: int):
+        """Build (and memoize) the single-request :class:`DecodePlan` for
+        ``(name, n_threads)`` WITHOUT dispatching it — thinned batch, split
+        states, and the symbol-layout permutation slice all derived and
+        device-staged.  This is the speculative pre-thinner's unit of work
+        (DESIGN.md §12): after it runs, the first real request for the pair
+        is a pure memo hit + cached-executable dispatch.  Identical to the
+        host-prep half of :meth:`decode`; both paths share the memo and the
+        plan hit/miss counters."""
         key = (name, n_threads)
         with self._lock:
             plan = self._plans.get(key)
@@ -468,7 +490,23 @@ class DecodeService:
                 self._plans[key] = plan
             else:
                 self._plan_hits += 1
-        return self.session.execute(plan)
+            return plan
+
+    def evict_prepared(self, name: str, n_threads: int) -> bool:
+        """Drop the memoized plan + thinned batch for one (name, capability)
+        pair (predictive-cache eviction under an entry budget — the pair
+        re-derives bit-exactly on its next request).  Returns whether
+        anything was dropped."""
+        key = (name, int(n_threads))
+        with self._lock:
+            dropped = self._plans.pop(key, None) is not None
+            dropped = (self._batches.pop(key, None) is not None) or dropped
+            return dropped
+
+    def decode(self, name: str, n_threads: int) -> jax.Array:
+        """Decode registered content at the client's parallelism; returns a
+        device int32 symbol array (no host round-trip)."""
+        return self.session.execute(self.prepare_request(name, n_threads))
 
     # ------------------------------------------------------------------
     # Chunked streaming path (DESIGN.md §10)
@@ -559,11 +597,16 @@ class DecodeService:
     # Microbatched path
     # ------------------------------------------------------------------
 
-    def submit(self, name: str, n_threads: int) -> DecodeTicket:
+    def submit(self, name: str, n_threads: int,
+               deadline=None) -> DecodeTicket:
         """Queue a request for coalescing (see module docstring for the
         flush policy).  With a pipeline broker attached
         (:meth:`start_pipeline`) the request is queued on the broker's
-        capability lanes instead and dispatched by its worker thread."""
+        capability lanes instead and dispatched by its worker thread;
+        ``deadline`` (a class name or explicit ms budget, DESIGN.md §12)
+        then bounds its queue wait.  The sync path has no lane scheduler,
+        so its flat ``max_delay_ms`` bound already caps the wait and
+        ``deadline`` is accepted but unused."""
         broker = self._broker
         if broker is None:
             with self._lock:
@@ -585,7 +628,7 @@ class DecodeService:
                     if len(self._pending) >= self.microbatch:
                         self._flush_pending()
                     return ticket
-        return broker.submit(name, n_threads)
+        return broker.submit(name, n_threads, deadline=deadline)
 
     def _flush_pending(self) -> None:
         """Dispatch the sync-path pending queue (no broker interaction —
@@ -621,9 +664,20 @@ class DecodeService:
         dispatch time, under the service lock — so a group formed while an
         ingest worker re-registers content can never mix one request's old
         split metadata with another's new stream: every request in the
-        group is prepared against one consistent content snapshot."""
+        group is prepared against one consistent content snapshot.
+        Registration is validated ONCE per distinct name at group build
+        (under the same RLock hold that builds the batches) rather than
+        per-entry — per-entry generation reads taken under separate lock
+        acquisitions are exactly the interleaving a concurrent ``extend()``
+        re-registration can split (see :meth:`content_snapshot`)."""
         try:
             with self._lock:
+                missing = sorted({
+                    name for name, _ in requests
+                    if self._generations.get(name, 0) == 0})
+                if missing:
+                    raise KeyError(
+                        f"content not registered: {', '.join(missing)}")
                 reqs = []
                 for ticket, (name, n_threads) in zip(tickets, requests):
                     batch, n = self._thinned_batch(name, n_threads)
@@ -639,37 +693,63 @@ class DecodeService:
                 ticket._fulfill(err=e)
             raise
 
+    def prepare_group(self, requests):
+        """Build (and memoize) the fused :class:`DecodePlan` a request group
+        ``[(name, n_threads), ...]`` would dispatch, WITHOUT executing it.
+
+        The predictive warmer's probe (DESIGN.md §12): pairing this with
+        ``session.is_compiled(plan)`` lets the idle-gap speculation compile
+        exactly the hot-set group shapes that are missing from the
+        executable cache and skip the ones warm traffic already minted.
+        Returns the plan only — tickets and output slicing stay with
+        :meth:`dispatch_group`."""
+        reqs = []
+        with self._lock:
+            for name, n_threads in requests:
+                if self._generations.get(name, 0) == 0:
+                    raise KeyError(f"content {name!r} is not registered")
+                batch, n = self._thinned_batch(name, n_threads)
+                reqs.append((None, (name, n_threads), batch, n))
+            plan, _sym_off = self._group_plan(reqs, record=False)
+        return plan
+
+    def _group_plan(self, reqs, record: bool = True):
+        """Resolve the (memoized) plan for a built request group.  Caller
+        holds ``_lock``.  MUTATES ``reqs`` into canonical order (the fused
+        layout is arrival-order independent, so any permutation of the same
+        group shares one memo entry; tickets travel with their request, so
+        slices still land).  ``record=False`` skips the dispatch counters
+        (speculative probes must not inflate ``fused_dispatches``)."""
+        if len(reqs) == 1:
+            _, key, batch, n = reqs[0]
+            plan = self._plans.get(key)
+            if plan is None:
+                plan = self.session.prepare(
+                    batch, self._contents[key[0]].stream, n)
+                self._plans[key] = plan
+            return plan, None
+        if record:
+            self._fused += 1
+            self._coalesced += len(reqs)
+        reqs.sort(key=lambda r: r[1])
+        group = tuple(key for _, key, _, _ in reqs)
+        hit = self._fused_plans.get(group)
+        if hit is None:
+            if len(self._fused_plans) >= self.MAX_FUSED_PLANS:
+                self._fused_plans.pop(next(iter(self._fused_plans)))
+            plan, sym_off, total = self._prepare_fused(reqs)
+            self._fused_plans[group] = (plan, sym_off, total)
+        else:
+            plan, sym_off, total = hit
+        return plan, sym_off
+
     def _dispatch(self, reqs) -> None:
         """Plan under the service lock; EXECUTE outside it (the executable
         run is the slow part — holding the lock there would serialize the
         broker's ingest registration against in-flight decode)."""
         with self._lock:
             self._flushes += 1
-            if len(reqs) == 1:
-                _, key, batch, n = reqs[0]
-                plan = self._plans.get(key)
-                if plan is None:
-                    plan = self.session.prepare(
-                        batch, self._contents[key[0]].stream, n)
-                    self._plans[key] = plan
-                sym_off = None
-            else:
-                self._fused += 1
-                self._coalesced += len(reqs)
-                # Canonical request order: the fused layout is arrival-order
-                # independent, so any permutation of the same group shares
-                # one memo entry (tickets travel with their request; slices
-                # still land).
-                reqs.sort(key=lambda r: r[1])
-                group = tuple(key for _, key, _, _ in reqs)
-                hit = self._fused_plans.get(group)
-                if hit is None:
-                    if len(self._fused_plans) >= self.MAX_FUSED_PLANS:
-                        self._fused_plans.pop(next(iter(self._fused_plans)))
-                    plan, sym_off, total = self._prepare_fused(reqs)
-                    self._fused_plans[group] = (plan, sym_off, total)
-                else:
-                    plan, sym_off, total = hit
+            plan, sym_off = self._group_plan(reqs)
         out = self.session.execute(plan)
         if sym_off is None:
             reqs[0][0]._fulfill(out=out)
