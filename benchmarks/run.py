@@ -15,6 +15,7 @@ Emits CSV to stdout and benchmarks/results/*.csv.  Suites:
     roofline          §Roofline    aggregates dry-run JSONs (if present)
     tuning            DESIGN §11   autotuned vs legacy bucket ladder + DB reuse
     predictive        DESIGN §12   speculative pre-thinning vs reactive cold path
+    observability     DESIGN §13   tracing/metrics overhead + span decomposition
 
 Also writes ``benchmarks/results/BENCH_summary.json`` — one consolidated
 machine-readable record per run (suite rows + per-suite wall time + the
@@ -32,9 +33,9 @@ import sys
 import time
 
 from . import (bench_combine, bench_compression, bench_encode, bench_engine,
-               bench_partition_sweep, bench_pipeline, bench_predictive,
-               bench_roofline, bench_streaming, bench_throughput,
-               bench_tuning)
+               bench_observability, bench_partition_sweep, bench_pipeline,
+               bench_predictive, bench_roofline, bench_streaming,
+               bench_throughput, bench_tuning)
 
 SUITES = {
     "compression": bench_compression.run,
@@ -48,6 +49,7 @@ SUITES = {
     "roofline": bench_roofline.run,
     "tuning": bench_tuning.run,
     "predictive": bench_predictive.run,
+    "observability": bench_observability.run,
 }
 
 # Suites that write their own guarded JSON summary; BENCH_summary.json
@@ -55,6 +57,7 @@ SUITES = {
 SUITE_SUMMARIES = {
     "tuning": "benchmarks/results/tuning_bench.json",
     "predictive": "benchmarks/results/predictive.json",
+    "observability": "benchmarks/results/observability.json",
 }
 
 

@@ -282,6 +282,59 @@ def predictive_demo():
           f"({total_r / total_p:.1f}x), {new_compiles} compiles in the "
           f"predictive window")
 
+    observability_demo()
+
+
+def observability_demo():
+    """End-to-end ticket tracing + the unified metrics surface
+    (DESIGN.md §13): every ticket carries a span tree — admission, lane
+    queue wait, coalesce, dispatch, executor run, delivery — whose spans
+    tile its lifetime exactly, so "where did this request's latency go"
+    is answerable per ticket, not just in aggregate.  The same service
+    exposes one ``metrics()`` snapshot unifying service/engine/broker/
+    registry/predictor counters with per-class deadline-miss accounting."""
+    from repro.runtime.observability import waterfall
+    from repro.runtime.pipeline import ControllerConfig
+    from repro.runtime.serve import DecodeService
+
+    rng = np.random.default_rng(29)
+    params = RansParams(n_bits=11, ways=32)
+    assets = {f"asset{i}": np.minimum(
+        rng.exponential(35, size=6_000).astype(np.int64), 255)
+        for i in range(4)}
+    model = StaticModel.from_symbols(
+        np.concatenate(list(assets.values())), 256, params)
+    svc = DecodeService(model, max_delay_ms=1e9)
+    svc.ingest_batch(assets, 64)
+
+    print("\nobservability (per-ticket span waterfall + unified metrics):")
+    with svc.start_pipeline(config=ControllerConfig(
+            max_batch=4, batch_sizes=(4,), target_delay_ms=5.0)) as broker:
+        names = list(assets)
+        for _ in range(2):                 # warm the fused group shape
+            for t in [svc.submit(n, 8) for n in names]:
+                np.asarray(t.result(timeout=120))
+        tickets = [broker.submit(n, 8, deadline="interactive")
+                   for n in names]
+        for name, t in zip(names, tickets):
+            assert (np.asarray(t.result(timeout=120)) == assets[name]).all()
+        print()
+        print(waterfall(tickets[0].trace))
+        snap = svc.metrics()
+        deadline = broker.snapshot()["deadline"]
+    lat = snap["recoil_request_latency_ms"]["values"]
+    ok = lat.get("decode|ok", {"count": 0, "sum": 0.0})
+    print(f"\n  unified snapshot: {len(snap)} metric families")
+    print(f"  decode ok latency: {ok['count']} requests, "
+          f"mean {ok['sum'] / max(ok['count'], 1):.2f} ms")
+    for cls, d in sorted(deadline.items()):
+        print(f"  deadline class {cls!r}: {d['fulfilled']} fulfilled, "
+              f"{d['missed']} missed")
+    prof = svc.obs.profiler.snapshot(top=1)["decode"]
+    print(f"  decode executor: {prof['compiles']} compiles "
+          f"({prof['compile_s'] * 1e3:.0f} ms), {prof['runs']} runs "
+          f"({prof['run_s'] * 1e3:.0f} ms)")
+
 
 if __name__ == "__main__":
     main()

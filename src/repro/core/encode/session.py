@@ -156,7 +156,11 @@ class EncoderSession:
 
     def __init__(self, model, *, impl: str = "jnp", window: int = 96,
                  fast_rounds: bool = True, policy=None,
-                 resume_capacity: int = 64):
+                 resume_capacity: int = 64, profiler=None):
+        # Injected per-plan-key compile/run timer (duck-typed, shared with
+        # the decode session under session="encode"; core never imports
+        # runtime).  None keeps execute() free of timing branches.
+        self.profiler = profiler
         self.model = model
         self.adaptive = np.asarray(model.f).ndim == 2
         self.params = model.params
@@ -213,7 +217,7 @@ class EncoderSession:
         fast = self.fast_rounds and plan.words_bucket < plan.words_bucket_full
         rounds = 1 if self.fast_rounds else ROUNDS
         cap = plan.words_bucket if fast else plan.words_bucket_full
-        out = self.executor.run(self._executable(plan, rounds, cap), plan)
+        out = self._run(plan, rounds, cap)
         flagged = bool(np.any(np.asarray(out["overflow"]))) or (
             rounds < ROUNDS
             and bool(np.any(np.asarray(out["needs_expansion"]))))
@@ -221,17 +225,36 @@ class EncoderSession:
             with self._lock:
                 self.stats.fallbacks += 1
             cap = plan.words_bucket_full
-            out = self.executor.run(
-                self._executable(plan, ROUNDS, cap), plan)
+            out = self._run(plan, ROUNDS, cap)
         return out, cap
+
+    def _run(self, plan: EncodePlan, rounds: int, cap: int):
+        """One tier dispatch, run-timed per plan key when profiled (the
+        encode pipeline reads its flags on the host right after, so these
+        run times are true walls, not dispatch costs)."""
+        exe = self._executable(plan, rounds, cap)
+        prof = self.profiler
+        if prof is None:
+            return self.executor.run(exe, plan)
+        t0 = prof.now()
+        out = self.executor.run(exe, plan)
+        prof.record_run("encode", plan.key + (rounds, cap), prof.now() - t0)
+        return out
 
     def _executable(self, plan: EncodePlan, rounds: int, words_bucket: int):
         key = plan.key + (rounds, words_bucket)
+        prof = self.profiler
         with self._lock:
             exe = self._exec.get(key)
             if exe is None:
-                exe = self.executor.lower(plan, expand_rounds=rounds,
-                                          words_bucket=words_bucket)
+                if prof is None:
+                    exe = self.executor.lower(plan, expand_rounds=rounds,
+                                              words_bucket=words_bucket)
+                else:
+                    t0 = prof.now()
+                    exe = self.executor.lower(plan, expand_rounds=rounds,
+                                              words_bucket=words_bucket)
+                    prof.record_compile("encode", key, prof.now() - t0)
                 self._exec[key] = exe
                 self.stats.compiles += 1
             else:

@@ -71,6 +71,12 @@ class Executor:
         # session users), so bumps go through _count_layout's lock.
         self.layout_plans = {"pointer": 0, "symbol": 0}
         self._layout_lock = threading.Lock()
+        # Transfer byte accounting (DESIGN.md §13): padded host->device
+        # upload bytes (JnpExecutor bumps) and lazy device->host
+        # materialization bytes (PallasExecutor bumps).  Declared on the
+        # base so the metrics collector reads one surface per executor.
+        self.stream_upload_bytes = 0
+        self.host_materialized_bytes = 0
 
     def _count_layout(self, layout: str) -> None:
         with self._layout_lock:
@@ -146,6 +152,7 @@ class JnpExecutor(Executor):
         padded = np.zeros(bucket, np.uint32)
         padded[:len(host)] = host.astype(np.uint32)
         self.stream_uploads += 1
+        self.stream_upload_bytes += int(padded.nbytes)
         return DeviceStream(words=self._put(padded), host=host,
                             n_words=len(host), bucket=bucket)
 
@@ -249,6 +256,7 @@ class PallasExecutor(Executor):
                 return hit[1]
             host = np.ascontiguousarray(np.asarray(device_arr[:n]))
             self.host_materializations += 1
+            self.host_materialized_bytes += int(host.nbytes)
             if len(self._host_cache) > 512:   # prune dead handles
                 for key in [k for k, (ref, _) in self._host_cache.items()
                             if ref() is None]:

@@ -77,9 +77,13 @@ class DecoderSession:
     def __init__(self, model: StaticModel, *, impl: str = "jnp",
                  packed_lut: bool | None = None, interpret: bool = True,
                  rows_per_block: int = 8, mesh=None, layout: str = "auto",
-                 policy=None):
+                 policy=None, profiler=None):
         if impl not in ("jnp", "pallas", "sharded"):
             raise ValueError(f"unknown impl {impl!r}")
+        # Injected per-plan-key compile/run timer (duck-typed — see
+        # repro.runtime.observability.ExecProfiler; core never imports
+        # runtime).  None keeps execute() free of timing branches.
+        self.profiler = profiler
         from repro.kernels.rans_decode.ops import _luts, packed_lut_ok
         self.model = model
         self.impl = impl
@@ -160,17 +164,33 @@ class DecoderSession:
             return len(self._exec)
 
     def execute(self, plan: DecodePlan) -> jax.Array:
-        """Run a prepared plan: compile on bucket miss, else reuse."""
+        """Run a prepared plan: compile on bucket miss, else reuse.
+
+        With a profiler injected, the compile (under the lock, counted
+        once per bucket miss) and the run call (outside it) are timed per
+        plan key — run time is the host-side dispatch cost unless the
+        caller syncs (see ``ExecProfiler``'s docstring)."""
+        prof = self.profiler
         with self._lock:
             self.stats.decodes += 1
             exe = self._exec.get(plan.key)
             if exe is None:
-                exe = self.executor.lower(plan)
+                if prof is None:
+                    exe = self.executor.lower(plan)
+                else:
+                    t0 = prof.now()
+                    exe = self.executor.lower(plan)
+                    prof.record_compile("decode", plan.key, prof.now() - t0)
                 self._exec[plan.key] = exe
                 self.stats.compiles += 1
             else:
                 self.stats.cache_hits += 1
-        return self.executor.run(exe, plan)[:plan.n_symbols]
+        if prof is None:
+            return self.executor.run(exe, plan)[:plan.n_symbols]
+        t0 = prof.now()
+        out = self.executor.run(exe, plan)[:plan.n_symbols]
+        prof.record_run("decode", plan.key, prof.now() - t0)
+        return out
 
     def decode_batch(self, batch: WalkBatch, stream,
                      n_symbols: int) -> jax.Array:

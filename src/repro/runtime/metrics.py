@@ -68,7 +68,12 @@ class LatencyWindow:
 
     The window holds the most recent ``size`` samples, so percentiles track
     current behavior under sustained load instead of averaging over the whole
-    run.  Thread-safe: the broker's workers record from their own threads.
+    run.  Thread-safe BY CONTRACT, not convention: both broker workers (the
+    decode dispatcher and the ingest worker) record concurrently, so every
+    ring mutation and every read of the ``(buffer, n)`` pair happens under
+    the instance lock — ``record``/``reset`` vs ``percentile``/
+    ``summary_ms``/``count`` interleavings can never tear a sample or pair a
+    stale count with a fresh buffer.
     """
 
     def __init__(self, size: int = 4096):
@@ -81,9 +86,18 @@ class LatencyWindow:
             self._buf[self._n % len(self._buf)] = seconds
             self._n += 1
 
+    def reset(self) -> None:
+        """Discard all samples (benchmark phase isolation: a suite measures
+        its warm phase without the cold phase's tail in the percentiles).
+        Stale buffer contents beyond the new count are unreachable —
+        ``record`` overwrites from slot 0."""
+        with self._lock:
+            self._n = 0
+
     @property
     def count(self) -> int:
-        return self._n
+        with self._lock:
+            return self._n
 
     def percentile(self, p: float) -> float:
         """p-th percentile (0-100) of the windowed samples, in seconds."""

@@ -146,7 +146,11 @@ class PipelineTicket(DecodeTicket):
             self.err = TicketCancelled(f"{self.kind} request cancelled")
             self.completed_at = time.perf_counter()
             self._event.set()
-            return True
+        # Outside the mutex (trace has its own lock): the open interval —
+        # queue wait or in-flight dispatch — becomes the terminal
+        # "cancelled" span; late phases from a racing dispatch are dropped.
+        self.trace.finish("cancelled", self.completed_at)
+        return True
 
     def result(self, timeout: float | None = 120.0):
         """The decode output (device symbol array) or ingest result
@@ -156,6 +160,9 @@ class PipelineTicket(DecodeTicket):
         ``timeout`` seconds (the request stays queued/in flight — a timed
         -out caller typically follows up with ``cancel()``)."""
         if not self._event.wait(timeout):
+            # Zero-width marker, not a terminal: the request is still
+            # queued/in flight and may yet complete (or be cancelled).
+            self.trace.event("result_timeout", timeout_s=timeout)
             raise TimeoutError(
                 f"{self.kind} request not completed within {timeout}s")
         if self.err is not None:
@@ -243,6 +250,10 @@ class PipelineBroker:
         self.ingest_errors = 0
         self.extend_events = 0
         self.stream_dispatches = 0
+        # Per-deadline-class SLO accounting, updated by the decode worker
+        # under _cv: {class: {"fulfilled": n, "missed": n}} where a miss is
+        # a ticket fulfilled after its deadline_at (DESIGN.md §13).
+        self.deadline_stats: dict[str, dict] = {}
 
         self._decode_thread = threading.Thread(
             target=self._decode_worker, name="recoil-decode", daemon=True)
@@ -278,6 +289,9 @@ class PipelineBroker:
         lane = int(n_threads)
         self.tracker.observe(name, lane)
         ticket = PipelineTicket(self.svc, kind="decode")
+        ticket.trace = self.svc.obs.tracer.start(
+            "decode", name=name, t0=ticket.submitted_at,
+            n_threads=lane, deadline=cls)
         ticket.deadline_class = cls
         ticket.deadline_at = ticket.submitted_at + budget_ms * 1e-3
         margin_ms = min(self.controller.cfg.deadline_margin_ms,
@@ -285,24 +299,36 @@ class PipelineBroker:
         ticket.flush_at = ticket.deadline_at - margin_ms * 1e-3
         with self._cv:
             if self._closing:
+                ticket.trace.finish("error", error="broker is closed")
                 raise RuntimeError("broker is closed")
             if self._queued + self._inflight >= self.max_queue:
                 self.rejected += 1
-                raise BrokerSaturated(
+                raise self._reject(ticket, BrokerSaturated(
                     f"decode queue at bound {self.max_queue}",
-                    retry_after_s=self._retry_after_s(self._queued))
+                    retry_after_s=self._retry_after_s(self._queued)))
             lane_q = self._lanes.setdefault(lane, deque())
             if len(lane_q) >= self.max_lane_depth:
                 self.rejected += 1
-                raise BrokerSaturated(
+                raise self._reject(ticket, BrokerSaturated(
                     f"lane {lane} at depth bound {self.max_lane_depth}",
-                    retry_after_s=self._retry_after_s(len(lane_q)))
+                    retry_after_s=self._retry_after_s(len(lane_q))))
+            ticket.trace.phase("admission")
             lane_q.append((ticket, name))
             self._queued += 1
             self.submitted += 1
             self.controller.observe_arrival(lane, ticket.submitted_at)
             self._cv.notify_all()
         return ticket
+
+    @staticmethod
+    def _reject(ticket, err: BrokerSaturated) -> BrokerSaturated:
+        """Terminate a ticket's trace as an admission rejection (the
+        ``retry_after_s`` hint lands in the trace meta) and hand back the
+        exception for the caller to raise — nothing was enqueued."""
+        ticket.trace.phase("admission", rejected=True,
+                           retry_after_s=err.retry_after_s)
+        ticket.trace.finish("rejected")
+        return err
 
     def anticipate(self, name: str, n_threads: int,
                    weight: float = 1.0) -> None:
@@ -325,15 +351,19 @@ class PipelineBroker:
         """Queue an ingest (encode + split-plan + register) for the ingest
         worker; the ticket resolves to the registered RecoilPlan."""
         ticket = PipelineTicket(self.svc, kind="ingest")
+        ticket.trace = self.svc.obs.tracer.start(
+            "ingest", name=name, t0=ticket.submitted_at)
         with self._cv:
             if self._closing:
+                ticket.trace.finish("error", error="broker is closed")
                 raise RuntimeError("broker is closed")
             if len(self._ingest_q) + self._ingest_inflight \
                     >= self.max_ingest_queue:
                 self.rejected += 1
-                raise BrokerSaturated(
+                raise self._reject(ticket, BrokerSaturated(
                     f"ingest queue at bound {self.max_ingest_queue}",
-                    retry_after_s=self._ingest_retry_after_s())
+                    retry_after_s=self._ingest_retry_after_s()))
+            ticket.trace.phase("admission")
             self._ingest_q.append((ticket, name, symbols, int(n_splits)))
             self.ingest_events += 1
             self._cv.notify_all()
@@ -356,15 +386,19 @@ class PipelineBroker:
         Extends always dispatch singly (never inside a vmapped
         ``ingest_batch`` — suffix shapes are per-content)."""
         ticket = PipelineTicket(self.svc, kind="extend")
+        ticket.trace = self.svc.obs.tracer.start(
+            "extend", name=name, t0=ticket.submitted_at)
         with self._cv:
             if self._closing:
+                ticket.trace.finish("error", error="broker is closed")
                 raise RuntimeError("broker is closed")
             if len(self._ingest_q) + self._ingest_inflight \
                     >= self.max_ingest_queue:
                 self.rejected += 1
-                raise BrokerSaturated(
+                raise self._reject(ticket, BrokerSaturated(
                     f"ingest queue at bound {self.max_ingest_queue}",
-                    retry_after_s=self._ingest_retry_after_s())
+                    retry_after_s=self._ingest_retry_after_s()))
+            ticket.trace.phase("admission")
             self._ingest_q.append((ticket, name, delta, 0))
             self.ingest_events += 1
             self.extend_events += 1
@@ -382,14 +416,19 @@ class PipelineBroker:
             raise KeyError(f"content {name!r} is not registered")
         ticket = StreamTicket(
             self.svc.stream_chunk_count(name, n_threads, n_chunks))
+        ticket.trace = self.svc.obs.tracer.start(
+            "stream", name=name, t0=ticket.submitted_at,
+            n_threads=int(n_threads))
         with self._cv:
             if self._closing:
+                ticket.trace.finish("error", error="broker is closed")
                 raise RuntimeError("broker is closed")
             if self._queued + self._inflight >= self.max_queue:
                 self.rejected += 1
-                raise BrokerSaturated(
+                raise self._reject(ticket, BrokerSaturated(
                     f"decode queue at bound {self.max_queue}",
-                    retry_after_s=self._retry_after_s(self._queued))
+                    retry_after_s=self._retry_after_s(self._queued)))
+            ticket.trace.phase("admission")
             self._stream_q.append((ticket, name, int(n_threads),
                                    int(n_chunks)))
             self._queued += 1
@@ -533,6 +572,7 @@ class PipelineBroker:
         ticket, name, n_threads, n_chunks = job
         t0 = self.clock.begin("decode")
         self.wait_window.record(t0 - ticket.submitted_at)
+        ticket.trace.phase("queue", t0)
         try:
             self.svc.dispatch_stream(name, n_threads, n_chunks, ticket)
             jax.block_until_ready(ticket.chunk(ticket.n_chunks - 1))
@@ -564,6 +604,7 @@ class PipelineBroker:
         t0 = self.clock.begin("decode")
         for t, _ in live:
             t.dispatched_at = t0
+            t.trace.phase("queue", t0)
             self.wait_window.record(t0 - t.submitted_at)
         try:
             self.svc.dispatch_group(requests, tickets)
@@ -577,6 +618,19 @@ class PipelineBroker:
             self.service_window.record(t1 - t0)
         self.dispatch_groups += 1
         self.completed += len(live)
+        # Deadline SLO accounting (per class): a ticket fulfilled after its
+        # deadline_at is a miss — the number the flush-early policy exists
+        # to keep low, now counted instead of inferred (ROADMAP follow-up).
+        with self._cv:
+            for t, _ in live:
+                if (t.deadline_at is None or t.cancelled
+                        or t.completed_at is None):
+                    continue
+                d = self.deadline_stats.setdefault(
+                    t.deadline_class, {"fulfilled": 0, "missed": 0})
+                d["fulfilled"] += 1
+                if t.completed_at > t.deadline_at:
+                    d["missed"] += 1
 
     def _pop_ingest_batch(self):
         """Under ``_cv``: a queue prefix of events with DISTINCT names (a
@@ -629,6 +683,8 @@ class PipelineBroker:
                 with self._cv:   # shared with the decode worker's bumps
                     self.cancelled += len(batch) - len(live)
             t0 = self.clock.begin("ingest")
+            for ticket, *_ in live:
+                ticket.trace.phase("queue", t0)
             try:
                 if len(live) == 1:
                     ticket, name, symbols, n_splits = live[0]
@@ -637,6 +693,8 @@ class PipelineBroker:
                     else:
                         plan = self.svc.ingest(name, symbols, n_splits)
                     ticket._fulfill(out=plan)
+                    ticket.trace.phase("execute")
+                    ticket.trace.finish("ok")
                 elif live:
                     contents = {name: symbols
                                 for _, name, symbols, _ in live}
@@ -644,10 +702,13 @@ class PipelineBroker:
                         contents, [n for _, _, _, n in live])
                     for ticket, name, _, _ in live:
                         ticket._fulfill(out=plans[name])
+                        ticket.trace.phase("execute", batch=len(live))
+                        ticket.trace.finish("ok")
             except Exception as e:
                 self.ingest_errors += 1
                 for ticket, *_ in live:
                     ticket._fulfill(err=e)
+                    ticket.trace.finish("error", error=repr(e))
             t1 = self.clock.end("ingest")
             for _ in live:
                 self.ingest_window.record((t1 - t0) / len(live))
@@ -674,6 +735,8 @@ class PipelineBroker:
             lanes = {lane: len(q) for lane, q in self._lanes.items() if q}
             depth = self._queued
             ingest_depth = len(self._ingest_q)
+            deadline = {cls: dict(d)
+                        for cls, d in self.deadline_stats.items()}
         return {
             "queue_depth": depth,
             "ingest_queue_depth": ingest_depth,
@@ -706,4 +769,5 @@ class PipelineBroker:
             "overlap": self.clock.snapshot(),
             "controller": self.controller.snapshot(),
             "registry": self.registry.snapshot(),
+            "deadline": deadline,
         }

@@ -48,6 +48,7 @@ import time
 import jax
 
 from repro.runtime.metrics import DecayingCounter
+from repro.runtime.observability import NULL_TRACE
 
 
 class HeatTracker:
@@ -243,6 +244,20 @@ class SpeculativePrethinner:
             return n
 
     def _run(self, task) -> None:
+        # Speculative work is traced like any other path (kind
+        # "speculate"): idle-gap units show up in the ring next to the
+        # requests they pre-warm, so "where did the gap go" is answerable.
+        obs = getattr(self._svc, "obs", None)
+        tr = (NULL_TRACE if obs is None else
+              obs.tracer.start("speculate", name=str(task[1]),
+                               unit=task[0]))
+        try:
+            self._run_unit(task)
+        finally:
+            tr.phase("run")
+            tr.finish("ok")
+
+    def _run_unit(self, task) -> None:
         if task[0] == "prethin":
             _, name, cap, gen = task
             try:

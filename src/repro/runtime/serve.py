@@ -65,6 +65,7 @@ from repro.core.rans import StaticModel
 from repro.core.recoil import RecoilPlan, build_split_states, combine_plan
 from repro.core.vectorized import WalkBatch
 from repro.models.model import LM
+from repro.runtime.observability import NULL_TRACE, Observability
 
 
 @dataclasses.dataclass
@@ -150,14 +151,21 @@ class ServiceStats:
 
 
 class DecodeTicket:
-    """Handle for a submitted (possibly coalesced) decode request."""
+    """Handle for a submitted (possibly coalesced) decode request.
 
-    __slots__ = ("_svc", "out", "err")
+    ``trace`` is the ticket's span context (DESIGN.md §13) — a live
+    :class:`~repro.runtime.observability.Trace` on traced paths,
+    :data:`NULL_TRACE` for ticketless fillers and disabled tracing, so
+    dispatch instrumentation never branches on ticket provenance.
+    """
+
+    __slots__ = ("_svc", "out", "err", "trace")
 
     def __init__(self, svc: "DecodeService"):
         self._svc = svc
         self.out = None
         self.err = None
+        self.trace = NULL_TRACE
 
     def _fulfill(self, out=None, err=None) -> None:
         """Dispatch completion hook — the broker's ticket subclass overrides
@@ -195,12 +203,14 @@ class StreamTicket:
     """
 
     __slots__ = ("n_chunks", "specs", "err", "submitted_at",
-                 "first_chunk_at", "completed_at", "_chunks", "_events")
+                 "first_chunk_at", "completed_at", "_chunks", "_events",
+                 "trace")
 
     def __init__(self, n_chunks: int):
         self.n_chunks = n_chunks
         self.specs: list[ChunkSpec] | None = None   # set at dispatch time
         self.err: Exception | None = None
+        self.trace = NULL_TRACE
         self.submitted_at = time.perf_counter()
         self.first_chunk_at: float | None = None
         self.completed_at: float | None = None
@@ -256,8 +266,18 @@ class DecodeService:
 
     def __init__(self, model: StaticModel, *, impl: str = "jnp",
                  microbatch: int = 8, max_delay_ms: float = 50.0,
+                 observe: bool = True, trace_capacity: int = 1024,
                  **session_kw):
-        self.session = DecoderSession(model, impl=impl, **session_kw)
+        # Observability first: the decode/encode sessions take its shared
+        # profiler at construction.  ``observe=False`` is the zero-overhead
+        # configuration the CI guard benchmarks against (NULL_TRACE
+        # everywhere, no profiler timing branches).
+        self.obs = Observability(enabled=observe,
+                                 trace_capacity=trace_capacity)
+        self.session = DecoderSession(model, impl=impl,
+                                      profiler=self.obs.profiler,
+                                      **session_kw)
+        self.obs.attach_service(self)
         self.microbatch = int(microbatch)
         self.max_delay_ms = float(max_delay_ms)
         self._encoder: EncoderSession | None = None   # built on first ingest
@@ -441,7 +461,8 @@ class DecodeService:
                 self._encoder = EncoderSession(
                     self.session.model,
                     policy="tuned" if self.session.tuning_profile is not None
-                    else None)
+                    else None,
+                    profiler=self.obs.profiler)
             return self._encoder
 
     # ------------------------------------------------------------------
@@ -569,6 +590,10 @@ class DecodeService:
                 return submit(name, n_threads, n_chunks)
         ticket = StreamTicket(self.stream_chunk_count(name, n_threads,
                                                       n_chunks))
+        ticket.trace = self.obs.tracer.start(
+            "stream", name=name, t0=ticket.submitted_at,
+            n_threads=n_threads, path="sync")
+        ticket.trace.phase("admission")
         return self.dispatch_stream(name, n_threads, n_chunks, ticket)
 
     def dispatch_stream(self, name: str, n_threads: int, n_chunks: int,
@@ -585,11 +610,15 @@ class DecodeService:
                     f"ticket expects {ticket.n_chunks} chunks but the plan "
                     f"yields {len(plans)} — content re-registered with "
                     f"fewer splits between submit and dispatch")
+            ticket.trace.phase("dispatch", chunks=len(plans))
             ticket.specs = [spec for _, spec in plans]
             for i, (plan, _) in enumerate(plans):
                 ticket._fulfill_chunk(i, self.session.execute(plan))
+            ticket.trace.phase("execute")
+            ticket.trace.finish("ok")
         except Exception as e:
             ticket._fail(e)
+            ticket.trace.finish("error", error=repr(e))
             raise
         return ticket
 
@@ -622,6 +651,12 @@ class DecodeService:
                     key = (name, n_threads)
                     batch, n = self._thinned_batch(name, n_threads)
                     ticket = DecodeTicket(self)
+                    # Sync path spans: admission = host prep at submit time
+                    # (the thinning above); the wait until flush is "queue".
+                    ticket.trace = self.obs.tracer.start(
+                        "decode", name=name, t0=now,
+                        n_threads=n_threads, path="sync")
+                    ticket.trace.phase("admission")
                     if not self._pending:
                         self._pending_t0 = now
                     self._pending.append((ticket, key, batch, n))
@@ -639,11 +674,16 @@ class DecodeService:
             reqs, self._pending = self._pending, []
         if not reqs:
             return
+        tq = time.perf_counter()
+        for ticket, _, _, _ in reqs:
+            ticket.trace.phase("queue", tq)
+            ticket.trace.phase("coalesce", tq)   # sync path coalesced at submit
         try:
             self._dispatch(reqs)
         except Exception as e:
             for ticket, _, _, _ in reqs:
                 ticket._fulfill(err=e)
+                ticket.trace.finish("error", error=repr(e))
             raise
 
     def flush(self) -> None:
@@ -685,12 +725,17 @@ class DecodeService:
         except Exception as e:
             for ticket in tickets:
                 ticket._fulfill(err=e)
+                ticket.trace.finish("error", error=repr(e))
             raise
+        tc = time.perf_counter()
+        for ticket in tickets:
+            ticket.trace.phase("coalesce", tc)
         try:
             self._dispatch(reqs)
         except Exception as e:
             for ticket, _, _, _ in reqs:
                 ticket._fulfill(err=e)
+                ticket.trace.finish("error", error=repr(e))
             raise
 
     def prepare_group(self, requests):
@@ -746,16 +791,51 @@ class DecodeService:
     def _dispatch(self, reqs) -> None:
         """Plan under the service lock; EXECUTE outside it (the executable
         run is the slow part — holding the lock there would serialize the
-        broker's ingest registration against in-flight decode)."""
+        broker's ingest registration against in-flight decode).
+
+        Span marks (DESIGN.md §13): plan resolution closes "dispatch",
+        executable completion closes "execute", fulfillment closes
+        "delivery".  On the broker path, honest execute spans come for
+        free: the broker worker ``block_until_ready``s right after
+        dispatch anyway, so syncing here for traced groups only moves
+        that wait inside the span.  The sync path stays fully
+        asynchronous — there the execute span is the host-side dispatch
+        cost and the caller's ``result()`` owns the device wait (blocking
+        a traced sync flush would CHARGE instrumentation for a sync the
+        uninstrumented path never does, which is exactly what the CI
+        overhead guard prices)."""
         with self._lock:
             self._flushes += 1
             plan, sym_off = self._group_plan(reqs)
+        traces = [t.trace for t, _, _, _ in reqs]
+        tp = time.perf_counter()
+        for tr in traces:
+            tr.phase("dispatch", tp)
         out = self.session.execute(plan)
+        if self._broker is not None and any(tr.live for tr in traces):
+            jax.block_until_ready(out)
+        tx = time.perf_counter()
+        for tr in traces:
+            tr.phase("execute", tx, group=len(reqs))
+        # Per-ticket finish, right after the ticket's own fulfillment,
+        # stamped at the ticket's own completion time when it records one
+        # (PipelineTicket) — each trace's span-sum then equals ITS
+        # measured end-to-end latency exactly.  One shared mark after the
+        # loop would charge every ticket the whole group's delivery tail.
         if sym_off is None:
-            reqs[0][0]._fulfill(out=out)
-            return
-        for (ticket, _, _, n), off in zip(reqs, sym_off):
-            ticket._fulfill(out=out[off:off + n])
+            ticket = reqs[0][0]
+            ticket._fulfill(out=out)
+            td = getattr(ticket, "completed_at", None) or time.perf_counter()
+            ticket.trace.phase("delivery", td)
+            ticket.trace.finish("ok", td)
+        else:
+            for (ticket, _, _, n), off in zip(reqs, sym_off):
+                ticket._fulfill(out=out[off:off + n])
+                if ticket.trace.live:
+                    td = getattr(ticket, "completed_at", None) \
+                        or time.perf_counter()
+                    ticket.trace.phase("delivery", td)
+                    ticket.trace.finish("ok", td)
 
     def _prepare_fused(self, reqs) -> tuple[DecodePlan, list[int], int]:
         streams: dict[int, DeviceStream] = {}
@@ -821,6 +901,15 @@ class DecodeService:
         profile's microbatch quantization sizes so the pre-compiled shape
         set matches what dispatch actually requests."""
         return self.session.tuning_profile
+
+    def metrics(self) -> dict:
+        """The unified metrics snapshot (native instruments + every tier's
+        collectors) — see ``repro.runtime.observability.SCHEMA``."""
+        return self.obs.snapshot()
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of :meth:`metrics`."""
+        return self.obs.exposition()
 
     @property
     def stats(self) -> ServiceStats:
