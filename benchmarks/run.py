@@ -16,6 +16,7 @@ Emits CSV to stdout and benchmarks/results/*.csv.  Suites:
     tuning            DESIGN §11   autotuned vs legacy bucket ladder + DB reuse
     predictive        DESIGN §12   speculative pre-thinning vs reactive cold path
     observability     DESIGN §13   tracing/metrics overhead + span decomposition
+    reliability       DESIGN §14   fault-injection plumbing cost + fault-storm survival
 
 Also writes ``benchmarks/results/BENCH_summary.json`` — one consolidated
 machine-readable record per run (suite rows + per-suite wall time + the
@@ -34,8 +35,8 @@ import time
 
 from . import (bench_combine, bench_compression, bench_encode, bench_engine,
                bench_observability, bench_partition_sweep, bench_pipeline,
-               bench_predictive, bench_roofline, bench_streaming,
-               bench_throughput, bench_tuning)
+               bench_predictive, bench_reliability, bench_roofline,
+               bench_streaming, bench_throughput, bench_tuning)
 
 SUITES = {
     "compression": bench_compression.run,
@@ -50,6 +51,7 @@ SUITES = {
     "tuning": bench_tuning.run,
     "predictive": bench_predictive.run,
     "observability": bench_observability.run,
+    "reliability": bench_reliability.run,
 }
 
 # Suites that write their own guarded JSON summary; BENCH_summary.json
@@ -58,6 +60,7 @@ SUITE_SUMMARIES = {
     "tuning": "benchmarks/results/tuning_bench.json",
     "predictive": "benchmarks/results/predictive.json",
     "observability": "benchmarks/results/observability.json",
+    "reliability": "benchmarks/results/reliability.json",
 }
 
 

@@ -104,17 +104,30 @@ def elastic_mesh_shape(n_devices: int, model_parallel: int,
 
     Keeps the TP degree fixed (weight shard layout), uses whole pods when
     ``pod_size`` is given, and shrinks the data axis to the largest fit.
-    Returns (pod, data, model) with pod=1 when pods are not in play."""
+    Returns (pod, data, model) with pod=1 when pods are not in play.
+
+    Raises ``ValueError`` for any configuration that cannot form a valid
+    grid: non-positive counts, fewer devices than the TP degree, or a
+    ``pod_size`` that is not a positive multiple of ``model_parallel``
+    (a pod smaller than one TP group used to fall through to a data=0
+    grid — an invalid mesh that failed far from the cause)."""
+    if n_devices <= 0 or model_parallel <= 0:
+        raise ValueError(
+            f"invalid mesh request: n_devices={n_devices}, "
+            f"model_parallel={model_parallel} must both be positive")
     if n_devices < model_parallel:
         raise ValueError("fewer devices than TP degree; cannot re-mesh")
     if pod_size:
+        if pod_size < model_parallel or pod_size % model_parallel:
+            raise ValueError(
+                f"pod_size={pod_size} is not a positive multiple of the "
+                f"TP degree {model_parallel} — a whole pod must hold an "
+                f"integral number of TP groups")
         pods = n_devices // pod_size
         if pods >= 1:
-            data = pod_size // model_parallel
-            return (pods, data, model_parallel)
-        n_devices = n_devices  # fall through: partial pod -> flat mesh
-    data = n_devices // model_parallel
-    return (1, data, model_parallel)
+            return (pods, pod_size // model_parallel, model_parallel)
+        # partial pod: fall through to a flat (pod-less) mesh
+    return (1, n_devices // model_parallel, model_parallel)
 
 
 def run_with_retries(step_fn: Callable, restore_fn: Callable,

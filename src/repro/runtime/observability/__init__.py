@@ -90,6 +90,17 @@ SCHEMA = {
     "recoil_broker_ingest_errors_total": ("counter", ()),
     "recoil_broker_extend_events_total": ("counter", ()),
     "recoil_broker_stream_dispatches_total": ("counter", ()),
+    # Reliability (DESIGN.md §14: supervision, retry, quarantine, degrade)
+    "recoil_broker_worker_restarts_total": ("counter", ()),
+    "recoil_broker_retries_total": ("counter", ()),
+    "recoil_broker_quarantined_total": ("counter", ()),
+    "recoil_broker_quarantine_rejects_total": ("counter", ()),
+    "recoil_broker_degraded_dispatches_total": ("counter", ()),
+    "recoil_broker_retry_queue_depth": ("gauge", ()),
+    "recoil_broker_quarantined_contents": ("gauge", ()),
+    "recoil_broker_degraded_lanes": ("gauge", ()),
+    "recoil_faults_armed": ("gauge", ()),
+    "recoil_faults_fired_total": ("counter", ("site",)),
     "recoil_broker_wait_ms": ("gauge", ("stat",)),
     "recoil_broker_service_ms": ("gauge", ("stat",)),
     "recoil_broker_ingest_service_ms": ("gauge", ("stat",)),
@@ -170,6 +181,7 @@ class Observability:
         self.registry.register_collector(lambda: _profiler_samples(self))
         self.registry.register_collector(lambda: _tracer_samples(self))
         self.registry.register_collector(lambda: _broker_samples(svc))
+        self.registry.register_collector(lambda: _fault_samples(svc))
 
     def snapshot(self) -> dict:
         return self.registry.snapshot()
@@ -250,7 +262,9 @@ def _tracer_samples(obs: Observability) -> list[dict]:
 _BROKER_COUNTERS = (
     "submitted", "completed", "rejected", "cancelled", "dispatch_groups",
     "dispatch_errors", "ingest_events", "ingest_dispatches",
-    "ingest_errors", "extend_events", "stream_dispatches")
+    "ingest_errors", "extend_events", "stream_dispatches",
+    "worker_restarts", "retries", "quarantine_rejects",
+    "degraded_dispatches")
 
 _WINDOW_STATS = ("p50_ms", "p95_ms", "p99_ms", "mean_ms")
 
@@ -305,11 +319,32 @@ def _broker_samples(svc) -> list[dict]:
                pred["warm_compiles"]),
             _c("recoil_predictor_evictions_total", pred["evictions"]),
         ]
+    rel = s["reliability"]
+    out += [
+        _c("recoil_broker_quarantined_total", rel["quarantined"]),
+        _c("recoil_broker_retry_queue_depth", rel["retry_queue_depth"]),
+        _c("recoil_broker_quarantined_contents",
+           len(rel["quarantined_contents"])),
+        _c("recoil_broker_degraded_lanes", len(rel["degraded_lanes"])),
+    ]
     for cls, d in sorted(s.get("deadline", {}).items()):
         out.append(_c("recoil_deadline_fulfilled_total", d["fulfilled"],
                       {"class": cls}))
         out.append(_c("recoil_deadline_missed_total", d["missed"],
                       {"class": cls}))
+    return out
+
+
+def _fault_samples(svc) -> list[dict]:
+    """Fault-injector visibility (reliability suite/bench runs; the no-op
+    production injector reports an empty armed set and no firings)."""
+    faults = getattr(svc, "faults", None)
+    if faults is None:
+        return []
+    snap = faults.snapshot()
+    out = [_c("recoil_faults_armed", len(snap["armed"]))]
+    out += [_c("recoil_faults_fired_total", n, {"site": site})
+            for site, n in sorted(snap["fired"].items())]
     return out
 
 

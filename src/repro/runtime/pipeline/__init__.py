@@ -13,8 +13,8 @@ docstrings here:
   * :mod:`.predictor`  — popularity-decayed heat + speculative pre-thinning
 """
 
-from .broker import (BrokerSaturated, PipelineBroker, PipelineTicket,
-                     TicketCancelled)
+from .broker import (BrokerSaturated, ContentQuarantined, PipelineBroker,
+                     PipelineTicket, TicketCancelled)
 from .capability import CapabilityRegistry, ClientCapability
 from .controller import AdaptiveController, ControllerConfig, FlushDecision
 from .predictor import HeatTracker, SpeculativePrethinner
@@ -23,6 +23,7 @@ __all__ = [
     "AdaptiveController",
     "BrokerSaturated",
     "CapabilityRegistry",
+    "ContentQuarantined",
     "ClientCapability",
     "ControllerConfig",
     "FlushDecision",

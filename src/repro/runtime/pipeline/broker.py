@@ -48,9 +48,33 @@ engine tiers (DESIGN.md §8):
     service lock (``DecodeService.dispatch_group``), so a concurrent
     re-registration can never tear a group across content versions.
 
+  * **Supervised workers** (DESIGN.md §14) — both worker loops run under a
+    supervisor: an exception that escapes the loop body (a bug in the
+    controller, a fault injected outside the dispatch error handling, a
+    speculation unit blowing up) fulfils the affected tickets with the
+    error, restores the ``_inflight``/``_ingest_inflight`` invariants from
+    the worker's in-flight work slot, increments ``worker_restarts``, and
+    restarts the loop — no client ever blocks on a dead thread and
+    ``drain()``/``close()`` always return.
+  * **Graceful degradation** (DESIGN.md §14) — transient dispatch faults
+    retry with bounded exponential backoff (per-ticket opt-in via
+    ``submit(..., retries=)``); content whose dispatch keeps failing is
+    quarantined (``submit`` serves :class:`ContentQuarantined` with a
+    ``retry_after_s`` hint instead of wedging a lane); a lane whose fused
+    group path keeps faulting falls back to per-request dispatch until a
+    probe run of singles succeeds.
+
 Lock order: broker queue lock (``_cv``) and the service lock are never held
 together by the broker (queues are popped first, dispatch runs after), and
 ``drain``/``close`` must not be called while holding the service lock.
+
+Counter discipline (single-writer invariant): every broker counter —
+``submitted``/``completed``/``dispatch_errors``/``stream_dispatches``/
+``worker_restarts``/... — is mutated ONLY under ``_cv``, and ``snapshot()``
+reads under ``_cv``, so any snapshot is an internally consistent cut
+(monotone across reads; ``submitted == completed + cancelled`` once
+drained).  Keep it that way: a counter bumped outside ``_cv`` can be torn
+against a concurrent snapshot (the pre-§14 ``completed`` bug).
 """
 
 from __future__ import annotations
@@ -85,6 +109,21 @@ class TicketCancelled(RuntimeError):
     """Raised by ``result()`` on a ticket whose request was cancelled."""
 
 
+class ContentQuarantined(RuntimeError):
+    """Served for content whose dispatch failed repeatedly: the broker
+    refuses new submits for ``retry_after_s`` seconds instead of letting a
+    poisoned asset wedge its lane with guaranteed-to-fail dispatches.
+    After expiry one probe request is admitted (half-open) — a further
+    failure re-quarantines immediately, a success clears the record."""
+
+    def __init__(self, name: str, retry_after_s: float):
+        super().__init__(
+            f"content {name!r} is quarantined after repeated dispatch "
+            f"faults; retry in {retry_after_s:.3f}s")
+        self.name = name
+        self.retry_after_s = retry_after_s
+
+
 class PipelineTicket(DecodeTicket):
     """Cross-thread future for a broker request (decode or ingest).
 
@@ -99,13 +138,22 @@ class PipelineTicket(DecodeTicket):
     when the resolved class budget exhausts, ``flush_at`` the earlier point
     (margin subtracted) at which the lane scheduler force-dispatches a
     partial group rather than let the ticket breach.
+
+    ``retries_left`` (from ``submit(..., retries=)``) opts the ticket into
+    transient-fault retry: a dispatch error on a ticket with retries left
+    does NOT complete it — ``_fulfill`` parks it as retry-pending and the
+    broker's failure handler re-enqueues it with exponential backoff
+    (DESIGN.md §14).  ``_fulfill_final`` bypasses the retry branch for
+    terminal deliveries (retries exhausted, quarantine, supervisor
+    recovery, broker close).
     """
 
     __slots__ = ("_event", "_mutex", "_cancelled", "kind", "submitted_at",
                  "dispatched_at", "completed_at", "deadline_class",
-                 "deadline_at", "flush_at")
+                 "deadline_at", "flush_at", "retries_left", "retry_attempt",
+                 "_retry_pending")
 
-    def __init__(self, svc, kind: str = "decode"):
+    def __init__(self, svc, kind: str = "decode", retries: int = 0):
         super().__init__(svc)
         self._event = threading.Event()
         self._mutex = threading.Lock()   # orders cancel() vs _fulfill()
@@ -117,15 +165,56 @@ class PipelineTicket(DecodeTicket):
         self.deadline_class = None
         self.deadline_at = None
         self.flush_at = None
+        self.retries_left = int(retries)
+        self.retry_attempt = 0
+        self._retry_pending = False
 
     def _fulfill(self, out=None, err=None) -> None:
         with self._mutex:
             if self._cancelled:
                 return   # cancelled in flight: the late result is dropped
+            if (err is not None and self.retries_left > 0
+                    and not isinstance(err, TicketCancelled)):
+                # Not terminal: the broker's dispatch-failure handler sees
+                # the pending flag and re-enqueues (or finalizes, if the
+                # content was quarantined / the broker is closing).  The
+                # provisional ``err`` is overwritten by the next attempt.
+                self._retry_pending = True
+                self.err = err
+                return
             self.out = out
             self.err = err
             self.completed_at = time.perf_counter()
             self._event.set()
+
+    def _fulfill_final(self, out=None, err=None) -> None:
+        """Terminal delivery that never parks as retry-pending (supervisor
+        recovery, retry exhaustion, quarantine, close)."""
+        with self._mutex:
+            if self._cancelled or self._event.is_set():
+                return
+            self._retry_pending = False
+            self.out = out
+            self.err = err
+            self.completed_at = time.perf_counter()
+            self._event.set()
+
+    def _claim_retry(self) -> bool:
+        """Broker failure handler: spend one retry from the budget.  Works
+        whether or not a provisional error was parked — broker-level faults
+        (quantize, group build) raise BEFORE the service's fulfill loop, so
+        ``_retry_pending`` may never have been set.  False when the ticket
+        has no budget left, was cancelled, or is already terminal."""
+        with self._mutex:
+            if self._cancelled or self._event.is_set():
+                return False
+            if self.retries_left <= 0:
+                return False
+            self._retry_pending = False
+            self.retries_left -= 1
+            self.retry_attempt += 1
+            self.err = None
+            return True
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -183,7 +272,10 @@ class PipelineBroker:
                  heat_half_life_s: float = 30.0, speculate_top_k: int = 16,
                  speculative_capacity: int | None = None,
                  min_heat: float = 0.25,
-                 registry_max_entries: int | None = None):
+                 registry_max_entries: int | None = None,
+                 retry_backoff_ms: float = 10.0,
+                 quarantine_after: int = 3, quarantine_s: float = 30.0,
+                 degrade_after: int = 2, degraded_probe: int = 4):
         self.svc = svc
         if controller is None and config is None:
             # A tuned service quantizes to the profile's measured microbatch
@@ -223,6 +315,17 @@ class PipelineBroker:
             top_k=speculate_top_k, min_heat=min_heat,
             capacity=speculative_capacity) if predictive else None)
 
+        # Degradation knobs (DESIGN.md §14): exponential per-ticket retry
+        # backoff base; consecutive single-content failures before a
+        # content quarantines and how long it sits out; consecutive fused
+        # -group failures before a lane degrades to per-request dispatch
+        # and how many single successes re-earn the fused path.
+        self.retry_backoff_s = float(retry_backoff_ms) * 1e-3
+        self.quarantine_after = int(quarantine_after)
+        self.quarantine_s = float(quarantine_s)
+        self.degrade_after = int(degrade_after)
+        self.degraded_probe = int(degraded_probe)
+
         self._cv = threading.Condition()
         self._lanes: dict[int, deque] = {}
         self._ingest_q: deque = deque()
@@ -231,6 +334,17 @@ class PipelineBroker:
         self._inflight = 0          # popped, not yet fulfilled (decode)
         self._ingest_inflight = 0
         self._closing = False
+        # Reliability state (all under _cv).  The work slots hold what a
+        # worker has popped but not yet completed — the supervisor's
+        # recovery reads them to fulfil orphaned tickets and restore the
+        # inflight counters when an exception escapes the loop body.
+        self._decode_work = None    # ("group", lane, popped) | ("stream", job)
+        self._ingest_work = None    # the popped ingest batch
+        self._retry_q: list = []    # [retry_at, lane, ticket, name]
+        self._content_faults: dict[str, int] = {}   # consecutive failures
+        self._quarantine: dict[str, float] = {}     # name -> until (ts)
+        self._lane_faults: dict[int, int] = {}      # consecutive group fails
+        self._degraded: dict[int, int] = {}         # lane -> probe singles left
 
         # Instruments (runtime.metrics): request wait (submit->dispatch),
         # decode service (dispatch->result ready), ingest service, and the
@@ -250,6 +364,11 @@ class PipelineBroker:
         self.ingest_errors = 0
         self.extend_events = 0
         self.stream_dispatches = 0
+        self.worker_restarts = 0    # supervisor recoveries (both workers)
+        self.retries = 0            # tickets re-enqueued after a fault
+        self.quarantined = 0        # quarantine entries created
+        self.quarantine_rejects = 0  # submits refused ContentQuarantined
+        self.degraded_dispatches = 0  # per-request fallback dispatch passes
         # Per-deadline-class SLO accounting, updated by the decode worker
         # under _cv: {class: {"fulfilled": n, "missed": n}} where a miss is
         # a ticket fulfilled after its deadline_at (DESIGN.md §13).
@@ -274,7 +393,7 @@ class PipelineBroker:
         return groups * self.controller.service_s(b)
 
     def submit(self, name: str, n_threads: int,
-               deadline=None) -> PipelineTicket:
+               deadline=None, retries: int = 0) -> PipelineTicket:
         """Queue a decode on the ``n_threads`` capability lane.
 
         ``deadline`` is a deadline class name (``interactive`` /
@@ -282,13 +401,19 @@ class PipelineBroker:
         None takes the controller's default class.  The lane dispatches a
         partial group rather than let the ticket's budget exhaust.  The
         submission also heats the (content, capability) pair in the
-        predictive tracker."""
+        predictive tracker.
+
+        ``retries`` opts the ticket into transient-fault retry: a dispatch
+        error re-enqueues it (bounded exponential backoff) up to that many
+        times before the error is delivered (DESIGN.md §14).  Quarantined
+        content is refused up front with :class:`ContentQuarantined`
+        carrying a ``retry_after_s`` hint."""
         if self.svc.generation(name) == 0:
             raise KeyError(f"content {name!r} is not registered")
         cls, budget_ms = self.controller.budget_ms(deadline)
         lane = int(n_threads)
         self.tracker.observe(name, lane)
-        ticket = PipelineTicket(self.svc, kind="decode")
+        ticket = PipelineTicket(self.svc, kind="decode", retries=retries)
         ticket.trace = self.svc.obs.tracer.start(
             "decode", name=name, t0=ticket.submitted_at,
             n_threads=lane, deadline=cls)
@@ -301,6 +426,19 @@ class PipelineBroker:
             if self._closing:
                 ticket.trace.finish("error", error="broker is closed")
                 raise RuntimeError("broker is closed")
+            until = self._quarantine.get(name)
+            if until is not None:
+                now = time.perf_counter()
+                if now < until:
+                    self.quarantine_rejects += 1
+                    raise self._reject(ticket, ContentQuarantined(
+                        name, retry_after_s=until - now),
+                        status="quarantined")
+                # Expired: half-open — admit ONE probe request, but keep
+                # the fault count at threshold-1 so a further failure
+                # re-quarantines immediately while a success clears it.
+                del self._quarantine[name]
+                self._content_faults[name] = self.quarantine_after - 1
             if self._queued + self._inflight >= self.max_queue:
                 self.rejected += 1
                 raise self._reject(ticket, BrokerSaturated(
@@ -321,13 +459,13 @@ class PipelineBroker:
         return ticket
 
     @staticmethod
-    def _reject(ticket, err: BrokerSaturated) -> BrokerSaturated:
+    def _reject(ticket, err, status: str = "rejected"):
         """Terminate a ticket's trace as an admission rejection (the
         ``retry_after_s`` hint lands in the trace meta) and hand back the
         exception for the caller to raise — nothing was enqueued."""
         ticket.trace.phase("admission", rejected=True,
                            retry_after_s=err.retry_after_s)
-        ticket.trace.finish("rejected")
+        ticket.trace.finish(status)
         return err
 
     def anticipate(self, name: str, n_threads: int,
@@ -524,9 +662,98 @@ class PipelineBroker:
                             else min(min_wait, decision.wait_more_ms))
         return best, best_take, min_wait
 
+    def _supervise(self, loop, recover) -> None:
+        """Run a worker loop under supervision (DESIGN.md §14): an exception
+        that escapes the loop body — i.e. one the dispatch error handling
+        did NOT absorb — is a worker crash.  ``recover`` fulfils the
+        orphaned tickets from the worker's in-flight work slot, restores
+        the inflight counters, and bumps ``worker_restarts``; then the loop
+        restarts, so a crashed worker never leaves ``drain()``/``close()``
+        hanging on a dead thread.  A normal return (closing, queues empty)
+        ends the thread."""
+        while True:
+            try:
+                loop()
+                return
+            except BaseException as e:   # noqa: BLE001 — supervisor catches all
+                recover(e)
+                time.sleep(0.001)   # yield: never hot-spin a crash loop
+
     def _decode_worker(self) -> None:
+        self._supervise(self._decode_main, self._recover_decode)
+
+    def _ingest_worker(self) -> None:
+        self._supervise(self._ingest_main, self._recover_ingest)
+
+    def _recover_decode(self, e) -> None:
+        """Supervisor recovery for the decode worker: deliver ``e`` to every
+        ticket the crashed iteration had popped (terminally — a crash is
+        not a retryable dispatch fault) and restore ``_inflight``."""
+        with self._cv:
+            work, self._decode_work = self._decode_work, None
+            if work is not None and work[0] == "stream":
+                ticket = work[1][0]
+                self._inflight -= 1
+                self.completed += 1
+                if ticket.err is None and ticket.completed_at is None:
+                    ticket._fail(e)
+                    ticket.trace.finish("error", error=repr(e),
+                                        supervisor=True)
+            elif work is not None:
+                _, lane, popped = work
+                self._inflight -= len(popped)
+                for t, _ in popped:
+                    if t.cancelled:
+                        self.cancelled += 1
+                        continue
+                    t._fulfill_final(err=e)
+                    t.trace.finish("error", error=repr(e), supervisor=True)
+                    self.completed += 1
+            self.worker_restarts += 1
+            self._cv.notify_all()
+
+    def _recover_ingest(self, e) -> None:
+        """Supervisor recovery for the ingest worker (mirror of
+        :meth:`_recover_decode` over the popped ingest batch)."""
+        with self._cv:
+            work, self._ingest_work = self._ingest_work, None
+            if work is not None:
+                self._ingest_inflight -= len(work)
+                self.ingest_errors += 1
+                for ticket, *_ in work:
+                    if ticket.cancelled:
+                        self.cancelled += 1
+                        continue
+                    ticket._fulfill_final(err=e)
+                    ticket.trace.finish("error", error=repr(e),
+                                        supervisor=True)
+            self.worker_restarts += 1
+            self._cv.notify_all()
+
+    def _promote_due_retries(self, now: float) -> float | None:
+        """Under ``_cv``: move due retry entries back onto their lanes
+        (they kept their ``_queued`` slot while backing off, so ``drain``
+        keeps waiting on them).  On close every entry promotes immediately
+        — backoff must not outlive the broker.  Returns seconds until the
+        next still-pending entry is due (None when the queue is empty)."""
+        due = None
+        keep = []
+        for entry in self._retry_q:
+            retry_at, lane, ticket, name = entry
+            if retry_at <= now or self._closing:
+                self._lanes.setdefault(lane, deque()).append((ticket, name))
+            else:
+                keep.append(entry)
+                left = retry_at - now
+                due = left if due is None else min(due, left)
+        self._retry_q = keep
+        return due
+
+    def _decode_main(self) -> None:
         while True:
             with self._cv:
+                now = time.perf_counter()
+                retry_due = self._promote_due_retries(now)
                 # Streams preempt lane grouping: a stream request wants its
                 # first chunk NOW — it never waits behind a lane's adaptive
                 # accumulation window (chunks are single-request plans, so
@@ -536,8 +763,8 @@ class PipelineBroker:
                     job = self._stream_q.popleft()
                     self._queued -= 1
                     self._inflight += 1
+                    self._decode_work = ("stream", job)
                 else:
-                    now = time.perf_counter()
                     lane, take, min_wait = self._pick_lane(now)
                     if lane is None:
                         if self._closing:
@@ -550,38 +777,54 @@ class PipelineBroker:
                             take = min(len(self._lanes[lane]),
                                        self.controller.cfg.max_batch)
                         else:
-                            self._cv.wait(timeout=None if min_wait is None
-                                          else max(min_wait, 1.0) * 1e-3)
+                            timeout = (None if min_wait is None
+                                       else max(min_wait, 1.0) * 1e-3)
+                            if retry_due is not None:
+                                timeout = (retry_due if timeout is None
+                                           else min(timeout, retry_due))
+                            self._cv.wait(timeout=timeout)
                             continue
                     q = self._lanes[lane]
                     popped = [q.popleft() for _ in range(min(take, len(q)))]
                     self._queued -= len(popped)
                     self._inflight += len(popped)
+                    self._decode_work = ("group", lane, popped)
+            # Reliability fault point OUTSIDE the dispatch error handling:
+            # only the supervisor can catch it (tests/test_reliability.py).
+            self.svc.faults.fire("broker.decode_worker")
             if job is not None:
                 self._dispatch_stream(job)
-                with self._cv:
-                    self._inflight -= 1
-                    self._cv.notify_all()
-                continue
-            self._dispatch(lane, popped)
-            with self._cv:
-                self._inflight -= len(popped)
-                self._cv.notify_all()
+            else:
+                self._dispatch(lane, popped)
 
     def _dispatch_stream(self, job) -> None:
         ticket, name, n_threads, n_chunks = job
         t0 = self.clock.begin("decode")
         self.wait_window.record(t0 - ticket.submitted_at)
         ticket.trace.phase("queue", t0)
+        err = None
         try:
             self.svc.dispatch_stream(name, n_threads, n_chunks, ticket)
             jax.block_until_ready(ticket.chunk(ticket.n_chunks - 1))
-        except Exception:
-            self.dispatch_errors += 1   # the ticket already carries the error
+        except Exception as e:
+            err = e
         t1 = self.clock.end("decode")
         self.service_window.record(t1 - t0)
-        self.stream_dispatches += 1
-        self.completed += 1
+        with self._cv:
+            if err is not None:
+                self.dispatch_errors += 1
+            self._inflight -= 1
+            self._decode_work = None
+            self.stream_dispatches += 1
+            self.completed += 1
+            self._cv.notify_all()
+        if err is not None and ticket.err is None \
+                and ticket.completed_at is None:
+            # Belt and suspenders: dispatch_stream fails its own ticket, but
+            # a fault escaping before it runs (or a block_until_ready error
+            # after the chunks fulfilled) must still unblock the caller.
+            ticket._fail(err)
+            ticket.trace.finish("error", error=repr(err))
 
     def _dispatch(self, lane: int, popped: list) -> None:
         # Cancelled tickets are dropped HERE — at dispatch-group build time
@@ -589,39 +832,41 @@ class PipelineBroker:
         # a fused executable call.  (A cancel landing after this point races
         # the in-flight dispatch; the ticket's mutex discards the result.)
         live = [p for p in popped if not p[0].cancelled]
-        if len(live) < len(popped):
-            with self._cv:   # two workers bump this counter; see snapshot()
-                self.cancelled += len(popped) - len(live)
-        if not live:
-            return
-        tickets = [t for t, _ in live]
-        requests = [(name, lane) for _, name in live]
-        if self.quantize_groups:
-            target = self.controller.quantize(len(requests))
-            for i in range(target - len(requests)):
-                requests.append(requests[i % len(live)])
-                tickets.append(DecodeTicket(self.svc))   # ticketless filler
+        with self._cv:
+            self.cancelled += len(popped) - len(live)
+            degraded = lane in self._degraded
+            if not live:
+                self._inflight -= len(popped)
+                self._decode_work = None
+                self._cv.notify_all()
+                return
         t0 = self.clock.begin("decode")
         for t, _ in live:
             t.dispatched_at = t0
             t.trace.phase("queue", t0)
             self.wait_window.record(t0 - t.submitted_at)
-        try:
-            self.svc.dispatch_group(requests, tickets)
-            jax.block_until_ready(
-                [t.out for t in tickets if t.out is not None])
-        except Exception:
-            self.dispatch_errors += 1   # tickets already carry the error
+        if degraded:
+            dispatched = self._dispatch_singles(lane, live)
+        else:
+            dispatched = self._dispatch_fused(lane, live)
         t1 = self.clock.end("decode")
-        self.controller.observe_service(len(requests), t1 - t0)
+        if dispatched:
+            # A faulted pass observes nothing: its timing would train the
+            # controller's service-time EMA on failure latency.
+            self.controller.observe_service(dispatched, t1 - t0)
         for _ in live:
             self.service_window.record(t1 - t0)
-        self.dispatch_groups += 1
-        self.completed += len(live)
-        # Deadline SLO accounting (per class): a ticket fulfilled after its
-        # deadline_at is a miss — the number the flush-early policy exists
-        # to keep low, now counted instead of inferred (ROADMAP follow-up).
         with self._cv:
+            self._inflight -= len(popped)
+            self._decode_work = None
+            self.dispatch_groups += 1
+            # A retry-pending ticket is not done: it completes (and counts)
+            # on its terminal pass, so ``submitted == completed + cancelled``
+            # still holds once drained.
+            self.completed += sum(1 for t, _ in live if t.done())
+            # Deadline SLO accounting (per class): a ticket fulfilled after
+            # its deadline_at is a miss — the number the flush-early policy
+            # exists to keep low, now counted instead of inferred.
             for t, _ in live:
                 if (t.deadline_at is None or t.cancelled
                         or t.completed_at is None):
@@ -631,6 +876,133 @@ class PipelineBroker:
                 d["fulfilled"] += 1
                 if t.completed_at > t.deadline_at:
                     d["missed"] += 1
+            self._cv.notify_all()
+
+    def _dispatch_fused(self, lane: int, live: list) -> int:
+        """The fused group path: quantize to a warmed bucket size (padding
+        with ticketless repeats of the group's own requests) and run ONE
+        ``dispatch_group``.  Everything that can raise — including the
+        historically pre-``try`` quantize/filler construction that used to
+        kill the worker thread (ISSUE 10) — is inside the try, so a fault
+        lands in the failure handler instead of escaping the loop.
+        Returns the dispatched request count (0 on fault) for the
+        controller's service-time observation."""
+        tickets = [t for t, _ in live]
+        requests = [(name, lane) for _, name in live]
+        try:
+            self.svc.faults.fire("broker.quantize", lane=lane,
+                                 n=len(requests))
+            if self.quantize_groups:
+                target = self.controller.quantize(len(requests))
+                for i in range(target - len(requests)):
+                    requests.append(requests[i % len(live)])
+                    tickets.append(DecodeTicket(self.svc))  # ticketless filler
+            self.svc.dispatch_group(requests, tickets)
+            jax.block_until_ready(
+                [t.out for t in tickets if t.out is not None])
+        except Exception as e:
+            with self._cv:
+                self.dispatch_errors += 1
+                n = self._lane_faults.get(lane, 0) + 1
+                self._lane_faults[lane] = n
+                if n >= self.degrade_after:
+                    # Consecutive fused faults: the lane falls back to
+                    # per-request dispatch until a probe run of singles
+                    # succeeds (DESIGN.md §14).
+                    self._degraded[lane] = self.degraded_probe
+                self._handle_dispatch_failure(lane, live, e)
+            return 0
+        with self._cv:
+            self._note_dispatch_success(
+                lane, {name for _, name in live}, fused=True)
+        return len(requests)
+
+    def _dispatch_singles(self, lane: int, live: list) -> int:
+        """Degraded mode (DESIGN.md §14): the lane's fused path kept
+        faulting, so serve each request individually — no quantization, no
+        fillers, no shared fate — until ``degraded_probe`` consecutive
+        singles succeed and the lane re-earns fusion.  Slower (per-request
+        dispatches) but isolates a poisoned group member instead of failing
+        every rider.  Returns the count of successful dispatches."""
+        with self._cv:
+            self.degraded_dispatches += 1
+        ok = 0
+        for ticket, name in live:
+            if ticket.cancelled:
+                continue
+            try:
+                self.svc.dispatch_group([(name, lane)], [ticket])
+                jax.block_until_ready(
+                    [ticket.out] if ticket.out is not None else [])
+                ok += 1
+                with self._cv:
+                    self._note_dispatch_success(lane, (name,), fused=False)
+            except Exception as e:
+                with self._cv:
+                    self.dispatch_errors += 1
+                    self._degraded[lane] = self.degraded_probe  # probe resets
+                    self._handle_dispatch_failure(lane, [(ticket, name)], e)
+        return ok
+
+    def _handle_dispatch_failure(self, lane: int, live: list, e) -> None:
+        """Caller holds ``_cv``.  The per-fault state machine (DESIGN.md
+        §14): attribute the fault to its content when attribution is exact
+        (every request in the failed dispatch names ONE content — a mixed
+        group's fault could be any member's), quarantine on repeated
+        faults, then decide retry-vs-finalize for each affected ticket."""
+        now = time.perf_counter()
+        names = {name for _, name in live}
+        quarantined_err = None
+        if len(names) == 1:
+            name = next(iter(names))
+            n = self._content_faults.get(name, 0) + 1
+            self._content_faults[name] = n
+            if n >= self.quarantine_after:
+                self._quarantine[name] = now + self.quarantine_s
+                self.quarantined += 1
+                quarantined_err = ContentQuarantined(
+                    name, retry_after_s=self.quarantine_s)
+        for ticket, name in live:
+            if ticket.done():
+                continue   # terminal already (no retries left, or cancelled)
+            if not ticket._claim_retry():
+                # Belt and suspenders (ISSUE 10): no retry budget, and the
+                # raising dispatch may never have reached its own fulfill
+                # loop — deliver the error terminally rather than strand
+                # the caller.
+                ticket._fulfill_final(err=e)
+                ticket.trace.finish("error", error=repr(e))
+                continue
+            if quarantined_err is not None or self._closing:
+                final = quarantined_err if quarantined_err is not None else e
+                ticket._fulfill_final(err=final)
+                ticket.trace.finish("error", error=repr(final))
+                continue
+            backoff = self.retry_backoff_s * (2 ** (ticket.retry_attempt - 1))
+            self._retry_q.append([now + backoff, lane, ticket, name])
+            self._queued += 1
+            self.retries += 1
+            ticket.trace.event("retry", attempt=ticket.retry_attempt,
+                               backoff_s=round(backoff, 6))
+        self._cv.notify_all()
+
+    def _note_dispatch_success(self, lane: int, names, fused: bool) -> None:
+        """Caller holds ``_cv``.  A clean dispatch clears the consecutive
+        -fault records for its contents (and lane, on the fused path); on
+        the degraded path it pays down the lane's probe budget — after
+        ``degraded_probe`` clean singles the lane re-earns fusion."""
+        for name in names:
+            self._content_faults.pop(name, None)
+            self._quarantine.pop(name, None)
+        if fused:
+            self._lane_faults.pop(lane, None)
+        elif lane in self._degraded:
+            left = self._degraded[lane] - 1
+            if left <= 0:
+                del self._degraded[lane]
+                self._lane_faults.pop(lane, None)
+            else:
+                self._degraded[lane] = left
 
     def _pop_ingest_batch(self):
         """Under ``_cv``: a queue prefix of events with DISTINCT names (a
@@ -654,7 +1026,7 @@ class PipelineBroker:
                 break
         return batch
 
-    def _ingest_worker(self) -> None:
+    def _ingest_main(self) -> None:
         while True:
             batch = None
             with self._cv:
@@ -664,6 +1036,7 @@ class PipelineBroker:
                 else:
                     batch = self._pop_ingest_batch()
                     self._ingest_inflight += len(batch)
+                    self._ingest_work = batch
             if batch is None:
                 # Idle gap: at most ONE speculative unit (pre-thin a hot
                 # pair or warm a missing fused shape), run OUTSIDE the
@@ -677,14 +1050,15 @@ class PipelineBroker:
                     if not self._ingest_q and not self._closing:
                         self._cv.wait(timeout=0.05)
                 continue
+            # Reliability fault point outside the dispatch error handling —
+            # only the supervisor can catch it (tests/test_reliability.py).
+            self.svc.faults.fire("broker.ingest_worker")
             # Same drop point as decode: cancelled ingests never encode.
             live = [ev for ev in batch if not ev[0].cancelled]
-            if len(live) < len(batch):
-                with self._cv:   # shared with the decode worker's bumps
-                    self.cancelled += len(batch) - len(live)
             t0 = self.clock.begin("ingest")
             for ticket, *_ in live:
                 ticket.trace.phase("queue", t0)
+            err = None
             try:
                 if len(live) == 1:
                     ticket, name, symbols, n_splits = live[0]
@@ -692,7 +1066,7 @@ class PipelineBroker:
                         plan = self.svc.extend(name, symbols)
                     else:
                         plan = self.svc.ingest(name, symbols, n_splits)
-                    ticket._fulfill(out=plan)
+                    ticket._fulfill_final(out=plan)
                     ticket.trace.phase("execute")
                     ticket.trace.finish("ok")
                 elif live:
@@ -701,21 +1075,25 @@ class PipelineBroker:
                     plans = self.svc.ingest_batch(
                         contents, [n for _, _, _, n in live])
                     for ticket, name, _, _ in live:
-                        ticket._fulfill(out=plans[name])
+                        ticket._fulfill_final(out=plans[name])
                         ticket.trace.phase("execute", batch=len(live))
                         ticket.trace.finish("ok")
             except Exception as e:
-                self.ingest_errors += 1
+                err = e
                 for ticket, *_ in live:
-                    ticket._fulfill(err=e)
+                    ticket._fulfill_final(err=e)
                     ticket.trace.finish("error", error=repr(e))
             t1 = self.clock.end("ingest")
             for _ in live:
                 self.ingest_window.record((t1 - t0) / len(live))
-            if live:
-                self.ingest_dispatches += 1
-            with self._cv:
+            with self._cv:   # single-writer invariant: counters under _cv
+                self.cancelled += len(batch) - len(live)
+                if err is not None:
+                    self.ingest_errors += 1
+                if live:
+                    self.ingest_dispatches += 1
                 self._ingest_inflight -= len(batch)
+                self._ingest_work = None
                 self._cv.notify_all()
 
     # ------------------------------------------------------------------
@@ -737,6 +1115,18 @@ class PipelineBroker:
             ingest_depth = len(self._ingest_q)
             deadline = {cls: dict(d)
                         for cls, d in self.deadline_stats.items()}
+            reliability = {
+                "worker_restarts": self.worker_restarts,
+                "retries": self.retries,
+                "retry_queue_depth": len(self._retry_q),
+                "quarantined": self.quarantined,
+                "quarantine_rejects": self.quarantine_rejects,
+                "quarantined_contents": sorted(self._quarantine),
+                "degraded_lanes": sorted(self._degraded),
+                "degraded_dispatches": self.degraded_dispatches,
+                "content_faults": dict(self._content_faults),
+                "lane_faults": dict(self._lane_faults),
+            }
         return {
             "queue_depth": depth,
             "ingest_queue_depth": ingest_depth,
@@ -763,6 +1153,11 @@ class PipelineBroker:
             "ingest_errors": self.ingest_errors,
             "extend_events": self.extend_events,
             "stream_dispatches": self.stream_dispatches,
+            "worker_restarts": reliability["worker_restarts"],
+            "retries": reliability["retries"],
+            "quarantine_rejects": reliability["quarantine_rejects"],
+            "degraded_dispatches": reliability["degraded_dispatches"],
+            "reliability": reliability,
             "wait": self.wait_window.summary_ms(),
             "service": self.service_window.summary_ms(),
             "ingest_service": self.ingest_window.summary_ms(),

@@ -65,6 +65,7 @@ from repro.core.rans import StaticModel
 from repro.core.recoil import RecoilPlan, build_split_states, combine_plan
 from repro.core.vectorized import WalkBatch
 from repro.models.model import LM
+from repro.runtime.faultinject import NULL_INJECTOR
 from repro.runtime.observability import NULL_TRACE, Observability
 
 
@@ -267,13 +268,19 @@ class DecodeService:
     def __init__(self, model: StaticModel, *, impl: str = "jnp",
                  microbatch: int = 8, max_delay_ms: float = 50.0,
                  observe: bool = True, trace_capacity: int = 1024,
-                 **session_kw):
+                 faults=None, **session_kw):
         # Observability first: the decode/encode sessions take its shared
         # profiler at construction.  ``observe=False`` is the zero-overhead
         # configuration the CI guard benchmarks against (NULL_TRACE
         # everywhere, no profiler timing branches).
         self.obs = Observability(enabled=observe,
                                  trace_capacity=trace_capacity)
+        # Fault injection (DESIGN.md §14): named fault points in dispatch /
+        # ingest / executor boundaries consult this injector.  Production
+        # default is the shared no-op singleton; the reliability suite and
+        # bench pass a ``runtime.faultinject.FaultInjector`` to drive the
+        # unhappy paths deterministically.
+        self.faults = faults if faults is not None else NULL_INJECTOR
         self.session = DecoderSession(model, impl=impl,
                                       profiler=self.obs.profiler,
                                       **session_kw)
@@ -333,6 +340,11 @@ class DecodeService:
         the wire bytes are untouched; decode just drops the stream pointer.
         Host-registered content without a log serves via the pointer-walk
         fallback."""
+        # Corruption fault point BEFORE validation: an armed corruptor
+        # mutates the payload here, and the validation below must reject it
+        # loudly — the reliability suite's proof that a poisoned container
+        # cannot reach serving state.
+        stream = self.faults.corrupt("service.register", stream, name=name)
         _validate_content(self.session.model, plan, stream, final_states,
                           enc_model=model)
         with self._lock:
@@ -410,6 +422,7 @@ class DecodeService:
         executor's ``host_materializations`` counts the copies exactly.)
         Returns the registered :class:`RecoilPlan` (e.g. for clients that
         want to know the supported parallelism)."""
+        self.faults.fire("service.ingest", name=name)
         res = self._encode_session().ingest(symbols, n_splits, name=name)
         self.register(name, res.plan, res.stream, res.final_states)
         with self._lock:
@@ -427,6 +440,7 @@ class DecodeService:
         for any other content swap.  Raises ``KeyError`` when ``name`` was
         never ingested through this service (host-registered content has no
         resumable encoder state — fall back to a full :meth:`ingest`)."""
+        self.faults.fire("service.extend", name=name)
         res = self._encode_session().extend(name, delta)
         self.register(name, res.plan, res.stream, res.final_states)
         with self._lock:
@@ -602,6 +616,7 @@ class DecodeService:
         (broker backend + sync path share this).  ``ticket.n_chunks`` must
         equal :meth:`stream_chunk_count` for the request."""
         try:
+            self.faults.fire("service.dispatch_stream", name=name)
             with self._lock:
                 self._streams += 1
                 plans = self._chunked_plans(name, n_threads, n_chunks)
@@ -627,15 +642,16 @@ class DecodeService:
     # ------------------------------------------------------------------
 
     def submit(self, name: str, n_threads: int,
-               deadline=None) -> DecodeTicket:
+               deadline=None, retries: int = 0) -> DecodeTicket:
         """Queue a request for coalescing (see module docstring for the
         flush policy).  With a pipeline broker attached
         (:meth:`start_pipeline`) the request is queued on the broker's
         capability lanes instead and dispatched by its worker thread;
         ``deadline`` (a class name or explicit ms budget, DESIGN.md §12)
-        then bounds its queue wait.  The sync path has no lane scheduler,
-        so its flat ``max_delay_ms`` bound already caps the wait and
-        ``deadline`` is accepted but unused."""
+        then bounds its queue wait and ``retries`` opts the ticket into
+        bounded transient-fault retry (DESIGN.md §14).  The sync path has
+        no lane scheduler or retry queue, so its flat ``max_delay_ms``
+        bound already caps the wait and both are accepted but unused."""
         broker = self._broker
         if broker is None:
             with self._lock:
@@ -663,7 +679,8 @@ class DecodeService:
                     if len(self._pending) >= self.microbatch:
                         self._flush_pending()
                     return ticket
-        return broker.submit(name, n_threads, deadline=deadline)
+        return broker.submit(name, n_threads, deadline=deadline,
+                             retries=retries)
 
     def _flush_pending(self) -> None:
         """Dispatch the sync-path pending queue (no broker interaction —
@@ -711,6 +728,16 @@ class DecodeService:
         acquisitions are exactly the interleaving a concurrent ``extend()``
         re-registration can split (see :meth:`content_snapshot`)."""
         try:
+            if len(requests) != len(tickets):
+                # Tickets fulfill positionally: a silent zip over mismatched
+                # lengths would strand the surplus tickets forever (their
+                # callers block until timeout) — fail the WHOLE group loudly
+                # so every ticket carries the error (ISSUE 10).
+                raise ValueError(
+                    f"dispatch_group got {len(requests)} requests but "
+                    f"{len(tickets)} tickets — they must align positionally")
+            self.faults.fire("service.dispatch_group",
+                             names=[name for name, _ in requests])
             with self._lock:
                 missing = sorted({
                     name for name, _ in requests
@@ -725,7 +752,8 @@ class DecodeService:
         except Exception as e:
             for ticket in tickets:
                 ticket._fulfill(err=e)
-                ticket.trace.finish("error", error=repr(e))
+                if not getattr(ticket, "_retry_pending", False):
+                    ticket.trace.finish("error", error=repr(e))
             raise
         tc = time.perf_counter()
         for ticket in tickets:
@@ -735,7 +763,12 @@ class DecodeService:
         except Exception as e:
             for ticket, _, _, _ in reqs:
                 ticket._fulfill(err=e)
-                ticket.trace.finish("error", error=repr(e))
+                # A broker ticket with retries left parks as retry-pending
+                # instead of completing; its trace must stay open for the
+                # retry attempt (the broker records a "retry" event and the
+                # terminal pass finishes it).
+                if not getattr(ticket, "_retry_pending", False):
+                    ticket.trace.finish("error", error=repr(e))
             raise
 
     def prepare_group(self, requests):
@@ -811,6 +844,7 @@ class DecodeService:
         tp = time.perf_counter()
         for tr in traces:
             tr.phase("dispatch", tp)
+        self.faults.fire("service.execute", group=len(reqs))
         out = self.session.execute(plan)
         if self._broker is not None and any(tr.live for tr in traces):
             jax.block_until_ready(out)

@@ -1,0 +1,503 @@
+"""Fault-tolerant serving (DESIGN.md §14): supervisor, injection, degradation.
+
+Proves the ISSUE-10 acceptance contract end to end against the real broker
+and service (jnp backend, small payloads):
+
+  * no worker thread stays dead — a fault escaping either worker loop's
+    dispatch error handling is recovered by the supervisor (orphaned
+    tickets fulfilled with the error, inflight invariants restored,
+    ``worker_restarts`` bumped) and the NEXT request decodes bit-exactly;
+  * every injected fault ends in a fulfilled-with-error ticket (or a
+    ``ContentQuarantined`` admission rejection carrying ``retry_after_s``),
+    never a hung ``result()`` or a ``drain()`` that does not return;
+  * the degradation ladder: per-ticket bounded retry-with-backoff,
+    content quarantine with half-open probe admission, and the fused ->
+    per-request degraded lane fallback;
+  * counter integrity under races: the broker's single-writer-under-_cv
+    discipline keeps every snapshot an internally consistent, monotone cut
+    (``submitted >= completed + cancelled`` at any instant, equality once
+    drained) — the pre-§14 ``completed``/``dispatch_errors`` counters were
+    bumped outside the lock and could tear;
+  * the repurposed train-side ``fault.py`` helpers: ``elastic_mesh_shape``
+    rejects impossible grids loudly instead of returning a data=0 mesh.
+
+Every drain/result here uses an explicit timeout: a hang is a FAILURE mode
+this suite exists to catch, not something to wait out.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime import fault
+from repro.runtime.faultinject import (FaultInjected, FaultInjector,
+                                       NULL_INJECTOR, drop_last_word)
+from repro.core.rans import RansParams, StaticModel
+from repro.runtime.pipeline import ContentQuarantined, ControllerConfig
+from repro.runtime.serve import DecodeService
+
+DRAIN_S = 60.0      # generous but finite: drain() must RETURN
+
+
+def _payloads(n_contents=3, size=2048, seed=3):
+    rng = np.random.default_rng(seed)
+    return {f"c{i}": np.minimum(
+        rng.exponential(35.0, size=size).astype(np.int64), 255)
+        for i in range(n_contents)}
+
+
+def _service(payloads, n_splits=16, faults=None, **kw):
+    model = StaticModel.from_symbols(
+        np.concatenate(list(payloads.values())), 256,
+        RansParams(n_bits=11, ways=32))
+    svc = DecodeService(model, faults=faults, **kw)
+    svc.ingest_batch(payloads, n_splits)
+    return svc
+
+
+def _fast_config(**kw):
+    """Dispatch promptly (small groups, short accumulation window)."""
+    return ControllerConfig(max_batch=4, target_delay_ms=2.0, **kw)
+
+
+# ----------------------------------------------------------------------
+# Fault injector unit behavior
+# ----------------------------------------------------------------------
+
+def test_fault_injector_semantics():
+    inj = FaultInjector()
+    inj.fire("anything")                      # unarmed: no-op
+    inj.arm("s", times=2)
+    with pytest.raises(FaultInjected):
+        inj.fire("s")
+    with pytest.raises(FaultInjected):
+        inj.fire("s")
+    inj.fire("s")                             # exhausted
+    assert inj.fires["s"] == 2
+    inj.arm("s", exc=KeyError)                # exception class
+    with pytest.raises(KeyError):
+        inj.fire("s")
+    boom = RuntimeError("boom")
+    inj.arm("s", exc=boom, times=None)        # instance + raise-always
+    for _ in range(3):
+        with pytest.raises(RuntimeError, match="boom"):
+            inj.fire("s")
+    inj.arm("m", match=lambda ctx: ctx.get("name") == "bad")
+    inj.fire("m", name="good")                # predicate filters firings
+    with pytest.raises(FaultInjected):
+        inj.fire("m", name="bad")
+    t0 = time.perf_counter()
+    inj.arm("d", mode="delay", delay_s=0.05)
+    inj.fire("d")
+    assert time.perf_counter() - t0 >= 0.05
+    inj.arm("c", mode="corrupt", mutate=lambda v: v + 1)
+    assert inj.corrupt("c", 41) == 42
+    assert inj.corrupt("c", 41) == 41         # corrupt times=1 exhausted
+    inj.fire("c")                             # corrupt spec never raises
+    snap = inj.snapshot()
+    assert set(snap["armed"]) == {"s", "m", "d", "c"}
+    assert snap["fired"]["c"] == 1
+    inj.disarm("s")
+    inj.fire("s")
+    inj.disarm()
+    assert inj.armed == ()
+    with pytest.raises(ValueError):
+        inj.arm("x", mode="nope")
+    with pytest.raises(ValueError):
+        inj.arm("x", mode="corrupt")          # corrupt requires mutate
+    # The production singleton is inert by construction.
+    NULL_INJECTOR.fire("s")
+    assert NULL_INJECTOR.corrupt("s", 7) == 7
+    assert NULL_INJECTOR.snapshot() == {"armed": [], "fired": {}}
+
+
+# ----------------------------------------------------------------------
+# Supervisor: no worker thread stays dead
+# ----------------------------------------------------------------------
+
+def test_supervisor_recovers_decode_worker():
+    inj = FaultInjector()
+    payloads = _payloads(1)
+    svc = _service(payloads, faults=inj)
+    with svc.start_pipeline(config=_fast_config()) as b:
+        inj.arm("broker.decode_worker")       # escapes dispatch handling
+        t = svc.submit("c0", 4)
+        with pytest.raises(FaultInjected):
+            t.result(timeout=DRAIN_S)
+        b.drain(timeout=DRAIN_S)              # the crashed iteration's
+        snap = b.snapshot()                   # inflight slot was restored
+        assert snap["worker_restarts"] == 1
+        assert snap["queue_depth"] == 0
+        # The restarted worker serves the next request bit-exactly.
+        t2 = svc.submit("c0", 4)
+        assert (np.asarray(t2.result(timeout=DRAIN_S))
+                == payloads["c0"]).all()
+        b.drain(timeout=DRAIN_S)
+        assert b.snapshot()["completed"] == 2
+
+
+def test_supervisor_recovers_ingest_worker():
+    inj = FaultInjector()
+    payloads = _payloads(1)
+    svc = _service(payloads, faults=inj)
+    fresh = np.roll(payloads["c0"], 7)   # same symbol set: model covers it
+    with svc.start_pipeline(config=_fast_config()) as b:
+        inj.arm("broker.ingest_worker")
+        t = b.submit_ingest("n0", fresh, 16)
+        with pytest.raises(FaultInjected):
+            t.result(timeout=DRAIN_S)
+        b.drain(timeout=DRAIN_S)
+        snap = b.snapshot()
+        assert snap["worker_restarts"] == 1
+        assert snap["ingest_errors"] == 1
+        # Restarted ingest worker registers and the content round-trips.
+        t2 = b.submit_ingest("n0", fresh, 16)
+        t2.result(timeout=DRAIN_S)
+        t3 = svc.submit("n0", 8)
+        assert (np.asarray(t3.result(timeout=DRAIN_S)) == fresh).all()
+
+
+def test_quantize_fault_does_not_kill_worker():
+    """ISSUE-10 satellite: ``controller.quantize`` + filler construction
+    used to run before ``_dispatch``'s try block — a fault there leaked
+    ``_inflight`` and killed the decode thread, hanging ``drain()``
+    forever.  Now it is inside the dispatch error handling: the ticket
+    carries the error, drain returns, and NO restart was needed."""
+    inj = FaultInjector()
+    payloads = _payloads(1)
+    svc = _service(payloads, faults=inj)
+    with svc.start_pipeline(config=_fast_config()) as b:
+        inj.arm("broker.quantize")
+        t = svc.submit("c0", 4)
+        with pytest.raises(FaultInjected):
+            t.result(timeout=DRAIN_S)
+        b.drain(timeout=DRAIN_S)              # MUST return (the regression)
+        snap = b.snapshot()
+        assert snap["dispatch_errors"] == 1
+        assert snap["worker_restarts"] == 0   # handled, not crashed
+        t2 = svc.submit("c0", 4)
+        assert (np.asarray(t2.result(timeout=DRAIN_S))
+                == payloads["c0"]).all()
+
+
+def test_stream_fault_fulfills_ticket_and_drains():
+    inj = FaultInjector()
+    payloads = _payloads(1)
+    svc = _service(payloads, faults=inj)
+    with svc.start_pipeline(config=_fast_config()) as b:
+        inj.arm("service.dispatch_stream")
+        st = svc.submit_stream("c0", 8, n_chunks=4)
+        with pytest.raises(FaultInjected):
+            st.chunk(0, timeout=DRAIN_S)
+        b.drain(timeout=DRAIN_S)
+        assert b.snapshot()["dispatch_errors"] == 1
+        st2 = svc.submit_stream("c0", 8, n_chunks=4)
+        assert (np.asarray(st2.result()) == payloads["c0"]).all()
+
+
+# ----------------------------------------------------------------------
+# dispatch_group hardening
+# ----------------------------------------------------------------------
+
+def test_dispatch_group_length_guard_fulfills_all_tickets():
+    """Mismatched requests/tickets used to zip silently: surplus tickets
+    were never fulfilled and their callers blocked forever.  Now the whole
+    group fails loudly and every ticket carries the error."""
+    payloads = _payloads(1)
+    svc = _service(payloads)
+    from repro.runtime.serve import DecodeTicket
+    tickets = [DecodeTicket(svc) for _ in range(3)]
+    with pytest.raises(ValueError, match="align positionally"):
+        svc.dispatch_group([("c0", 4), ("c0", 4)], tickets)
+    for t in tickets:
+        assert isinstance(t.err, ValueError)  # none stranded
+
+
+def test_execute_boundary_fault_fulfills_group():
+    inj = FaultInjector()
+    payloads = _payloads(2)
+    svc = _service(payloads, faults=inj)
+    with svc.start_pipeline(config=_fast_config()) as b:
+        inj.arm("service.execute")
+        t = svc.submit("c0", 4)
+        with pytest.raises(FaultInjected):
+            t.result(timeout=DRAIN_S)
+        b.drain(timeout=DRAIN_S)
+        assert b.snapshot()["dispatch_errors"] == 1
+        t2 = svc.submit("c1", 4)
+        assert (np.asarray(t2.result(timeout=DRAIN_S))
+                == payloads["c1"]).all()
+
+
+def test_delay_fault_completes_without_errors():
+    """Slow-shard emulation: a delay fault stretches latency but must not
+    surface as an error anywhere."""
+    inj = FaultInjector()
+    payloads = _payloads(1)
+    svc = _service(payloads, faults=inj)
+    with svc.start_pipeline(config=_fast_config()) as b:
+        inj.arm("service.execute", mode="delay", delay_s=0.05)
+        t0 = time.perf_counter()
+        t = svc.submit("c0", 4)
+        out = t.result(timeout=DRAIN_S)
+        assert time.perf_counter() - t0 >= 0.05
+        assert (np.asarray(out) == payloads["c0"]).all()
+        b.drain(timeout=DRAIN_S)
+        snap = b.snapshot()
+        assert snap["dispatch_errors"] == 0 == snap["worker_restarts"]
+
+
+def test_corrupted_container_rejected_at_registration():
+    """A poisoned container must be caught by registration validation —
+    loudly, before it can reach serving state — and the previously
+    registered version keeps serving bit-exactly."""
+    inj = FaultInjector()
+    payloads = _payloads(1)
+    svc = _service(payloads, faults=inj)
+    inj.arm("service.register", mode="corrupt", mutate=drop_last_word)
+    with pytest.raises(ValueError, match="words"):
+        svc.ingest("c0", payloads["c0"], 16)
+    gen = svc.generation("c0")
+    assert (np.asarray(svc.decode("c0", 8)) == payloads["c0"]).all()
+    # Injector exhausted (times=1): the next ingest registers cleanly.
+    svc.ingest("c0", payloads["c0"], 16)
+    assert svc.generation("c0") == gen + 1
+    assert (np.asarray(svc.decode("c0", 8)) == payloads["c0"]).all()
+
+
+# ----------------------------------------------------------------------
+# Graceful degradation: retry, quarantine, degraded lanes
+# ----------------------------------------------------------------------
+
+def test_retry_transient_fault_succeeds():
+    inj = FaultInjector()
+    payloads = _payloads(1)
+    svc = _service(payloads, faults=inj)
+    with svc.start_pipeline(config=_fast_config(),
+                            retry_backoff_ms=1.0) as b:
+        inj.arm("service.dispatch_group", times=1)     # raise-once
+        t = svc.submit("c0", 4, retries=2)
+        assert (np.asarray(t.result(timeout=DRAIN_S))
+                == payloads["c0"]).all()
+        b.drain(timeout=DRAIN_S)
+        snap = b.snapshot()
+        assert snap["retries"] == 1
+        assert snap["dispatch_errors"] == 1
+        assert snap["completed"] == 1
+        assert snap["reliability"]["retry_queue_depth"] == 0
+
+
+def test_retry_budget_exhaustion_delivers_error():
+    inj = FaultInjector()
+    payloads = _payloads(1)
+    svc = _service(payloads, faults=inj)
+    with svc.start_pipeline(config=_fast_config(), retry_backoff_ms=1.0,
+                            quarantine_after=99) as b:
+        inj.arm("service.dispatch_group", times=None)  # raise-always
+        t = svc.submit("c0", 4, retries=2)
+        with pytest.raises(FaultInjected):
+            t.result(timeout=DRAIN_S)
+        b.drain(timeout=DRAIN_S)
+        snap = b.snapshot()
+        assert snap["retries"] == 2                    # budget spent exactly
+        assert snap["dispatch_errors"] == 3            # 1 + 2 retries
+        assert snap["completed"] == 1
+
+
+def test_no_retry_without_opt_in():
+    inj = FaultInjector()
+    payloads = _payloads(1)
+    svc = _service(payloads, faults=inj)
+    with svc.start_pipeline(config=_fast_config()) as b:
+        inj.arm("service.dispatch_group", times=1)
+        t = svc.submit("c0", 4)                        # retries=0 default
+        with pytest.raises(FaultInjected):
+            t.result(timeout=DRAIN_S)
+        b.drain(timeout=DRAIN_S)
+        assert b.snapshot()["retries"] == 0
+
+
+def test_quarantine_lifecycle():
+    inj = FaultInjector()
+    payloads = _payloads(2)
+    svc = _service(payloads, faults=inj)
+    with svc.start_pipeline(config=_fast_config(), quarantine_after=2,
+                            quarantine_s=30.0) as b:
+        inj.arm("service.dispatch_group", times=None,
+                match=lambda ctx: "c0" in ctx["names"])
+        for _ in range(2):                             # reach the threshold
+            t = svc.submit("c0", 4)
+            with pytest.raises(FaultInjected):
+                t.result(timeout=DRAIN_S)
+            b.drain(timeout=DRAIN_S)
+        # Quarantined: refused at admission with a retry hint, the lane is
+        # never wedged with guaranteed-to-fail dispatches.
+        with pytest.raises(ContentQuarantined) as exc:
+            svc.submit("c0", 4)
+        assert 0.0 < exc.value.retry_after_s <= 30.0
+        snap = b.snapshot()
+        assert snap["reliability"]["quarantined"] == 1
+        assert snap["quarantine_rejects"] == 1
+        assert snap["reliability"]["quarantined_contents"] == ["c0"]
+        # Healthy content on the same lane is unaffected.
+        t = svc.submit("c1", 4)
+        assert (np.asarray(t.result(timeout=DRAIN_S))
+                == payloads["c1"]).all()
+
+
+def test_quarantine_half_open_probe():
+    inj = FaultInjector()
+    payloads = _payloads(1)
+    svc = _service(payloads, faults=inj)
+    with svc.start_pipeline(config=_fast_config(), quarantine_after=2,
+                            quarantine_s=0.05) as b:
+        inj.arm("service.dispatch_group", times=None)
+        for _ in range(2):
+            t = svc.submit("c0", 4)
+            with pytest.raises(FaultInjected):
+                t.result(timeout=DRAIN_S)
+            b.drain(timeout=DRAIN_S)
+        with pytest.raises(ContentQuarantined):
+            svc.submit("c0", 4)
+        time.sleep(0.1)                       # expiry -> half-open
+        # Probe fails while the fault persists: re-quarantined immediately
+        # (fault count was held at threshold-1).
+        t = svc.submit("c0", 4)
+        with pytest.raises(FaultInjected):
+            t.result(timeout=DRAIN_S)
+        b.drain(timeout=DRAIN_S)
+        with pytest.raises(ContentQuarantined):
+            svc.submit("c0", 4)
+        assert b.snapshot()["reliability"]["quarantined"] == 2
+        time.sleep(0.1)
+        inj.disarm()                          # fault fixed: probe succeeds
+        t = svc.submit("c0", 4)
+        assert (np.asarray(t.result(timeout=DRAIN_S))
+                == payloads["c0"]).all()
+        b.drain(timeout=DRAIN_S)   # result() can return before the worker's
+        snap = b.snapshot()["reliability"]   # success bookkeeping runs
+        assert snap["quarantined_contents"] == []     # record cleared
+        assert snap["content_faults"] == {}
+
+
+def test_degraded_mode_falls_back_to_singles_and_recovers():
+    """A lane whose FUSED path keeps faulting (here: the quantize step,
+    which per-request dispatch never runs) degrades to singles — the
+    retried ticket then succeeds — and ``degraded_probe`` clean singles
+    re-earn fusion."""
+    inj = FaultInjector()
+    payloads = _payloads(1)
+    svc = _service(payloads, faults=inj)
+    with svc.start_pipeline(config=_fast_config(), retry_backoff_ms=1.0,
+                            degrade_after=2, degraded_probe=2,
+                            quarantine_after=99) as b:
+        inj.arm("broker.quantize", times=None)         # fused path only
+        t = svc.submit("c0", 4, retries=3)
+        assert (np.asarray(t.result(timeout=DRAIN_S))
+                == payloads["c0"]).all()
+        b.drain(timeout=DRAIN_S)
+        snap = b.snapshot()
+        assert snap["degraded_dispatches"] >= 1
+        assert snap["dispatch_errors"] == 2            # the 2 fused faults
+        assert 4 in snap["reliability"]["degraded_lanes"]
+        inj.disarm()   # fused path healthy again before fusion resumes
+        # The retried single already paid one probe down (2 -> 1); one more
+        # clean single restores fusion.
+        t = svc.submit("c0", 4)
+        assert (np.asarray(t.result(timeout=DRAIN_S))
+                == payloads["c0"]).all()
+        b.drain(timeout=DRAIN_S)
+        assert b.snapshot()["reliability"]["degraded_lanes"] == []
+        # Back on the (healthy) fused path, still bit-exact.
+        t = svc.submit("c0", 4)
+        assert (np.asarray(t.result(timeout=DRAIN_S))
+                == payloads["c0"]).all()
+
+
+# ----------------------------------------------------------------------
+# Counter integrity under races (single-writer-under-_cv invariant)
+# ----------------------------------------------------------------------
+
+def test_counter_integrity_under_threaded_stress():
+    inj = FaultInjector()
+    payloads = _payloads(3)
+    svc = _service(payloads, faults=inj)
+    monotone = ("submitted", "completed", "cancelled", "dispatch_groups",
+                "dispatch_errors", "retries", "worker_restarts",
+                "stream_dispatches", "ingest_dispatches")
+    with svc.start_pipeline(config=_fast_config(),
+                            retry_backoff_ms=1.0) as b:
+        inj.arm("service.dispatch_group", times=3)     # absorbed by retries
+        stop = threading.Event()
+        violations: list[str] = []
+
+        def sample():
+            prev = {k: 0 for k in monotone}
+            while not stop.is_set():
+                s = b.snapshot()
+                for k in monotone:
+                    if s[k] < prev[k]:
+                        violations.append(f"{k} went backwards: "
+                                          f"{prev[k]} -> {s[k]}")
+                    prev[k] = s[k]
+                if s["submitted"] < s["completed"] + s["cancelled"]:
+                    violations.append(
+                        f"torn cut: submitted {s['submitted']} < completed "
+                        f"{s['completed']} + cancelled {s['cancelled']}")
+
+        tickets = []
+        tlock = threading.Lock()
+
+        def client(seed):
+            for i in range(30):
+                name = f"c{(seed + i) % 3}"
+                t = svc.submit(name, [4, 16][i % 2], retries=2)
+                with tlock:
+                    tickets.append((name, t))
+
+        sampler = threading.Thread(target=sample)
+        clients = [threading.Thread(target=client, args=(s,))
+                   for s in range(3)]
+        sampler.start()
+        for c in clients:
+            c.start()
+        for c in clients:
+            c.join()
+        b.drain(timeout=DRAIN_S)
+        stop.set()
+        sampler.join()
+        assert not violations, violations[:5]
+        snap = b.snapshot()
+        assert snap["submitted"] == 90
+        assert snap["completed"] + snap["cancelled"] == 90
+        assert snap["dispatch_errors"] == 3
+        assert snap["retries"] >= 3
+        for name, t in tickets:               # retries absorbed every fault
+            assert (np.asarray(t.result(timeout=DRAIN_S))
+                    == payloads[name]).all(), name
+
+
+# ----------------------------------------------------------------------
+# fault.py: elastic_mesh_shape validation (ISSUE-10 satellite)
+# ----------------------------------------------------------------------
+
+def test_elastic_mesh_shape_rejects_invalid_grids():
+    # Valid shapes unchanged (mirrors test_train_runtime).
+    assert fault.elastic_mesh_shape(512, 16, pod_size=256) == (2, 16, 16)
+    assert fault.elastic_mesh_shape(192, 16) == (1, 12, 16)
+    # pod smaller than one TP group used to return a data=0 grid.
+    with pytest.raises(ValueError, match="multiple"):
+        fault.elastic_mesh_shape(512, 16, pod_size=8)
+    # pod not an integral number of TP groups.
+    with pytest.raises(ValueError, match="multiple"):
+        fault.elastic_mesh_shape(512, 16, pod_size=40)
+    with pytest.raises(ValueError, match="positive"):
+        fault.elastic_mesh_shape(0, 16)
+    with pytest.raises(ValueError, match="positive"):
+        fault.elastic_mesh_shape(16, 0)
+    with pytest.raises(ValueError, match="fewer devices"):
+        fault.elastic_mesh_shape(8, 16)
+    # Partial pod still falls through to the flat mesh.
+    assert fault.elastic_mesh_shape(128, 16, pod_size=256) == (1, 8, 16)
